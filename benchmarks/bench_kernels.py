@@ -1,0 +1,50 @@
+"""Kernel-level microbenchmarks: Pallas (interpret) vs jnp-oracle wall time
+at CPU scale + the analytic VMEM working set per BlockSpec tile (the
+quantity that matters on real TPU)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import time_call
+from repro.kernels import ops, ref
+
+
+def run():
+    rows = []
+    key = jax.random.PRNGKey(0)
+    # decode attention
+    B, S, Hkv, G, hd, block_k = 4, 1024, 2, 4, 128, 512
+    q = jax.random.normal(key, (B, Hkv * G, hd), jnp.float32)
+    kc = jax.random.normal(key, (B, Hkv, S, hd), jnp.float32)
+    vc = jax.random.normal(key, (B, Hkv, S, hd), jnp.float32)
+    clen = jnp.full((B,), S, jnp.int32)
+    t_ref = time_call(
+        lambda: ref.decode_attention_ref(q.reshape(B, Hkv, G, hd), kc, vc,
+                                         clen))
+    vmem_kib = (2 * block_k * hd * 2 + G * hd * 4 + 2 * G * 128 * 4) / 1024
+    rows.append({"name": "kernel_decode_attn_ref",
+                 "us_per_call": round(t_ref * 1e6, 1),
+                 "derived": f"S={S};vmem_per_tile_kib={vmem_kib:.0f}"})
+    # rwkv6
+    Bs, Ss, H, P = 2, 256, 4, 64
+    r = jax.random.normal(key, (Bs, Ss, H, P)) * 0.5
+    k2 = jax.random.normal(key, (Bs, Ss, H, P)) * 0.5
+    v2 = jax.random.normal(key, (Bs, Ss, H, P)) * 0.5
+    w2 = jax.nn.sigmoid(jax.random.normal(key, (Bs, Ss, H, P))) * 0.5 + 0.5
+    u2 = jax.random.normal(key, (H, P)) * 0.3
+    t_ref = time_call(lambda: ref.rwkv6_scan_ref(r, k2, v2, w2, u2))
+    rows.append({"name": "kernel_rwkv6_ref",
+                 "us_per_call": round(t_ref * 1e6, 1),
+                 "derived": f"state_vmem_kib={P*P*4/1024:.0f}"})
+    # ssm
+    N = 64
+    x = jax.random.normal(key, (Bs, Ss, H, P)) * 0.5
+    Bi = jax.random.normal(key, (Bs, Ss, N)) * 0.5
+    Ci = jax.random.normal(key, (Bs, Ss, N)) * 0.5
+    a = jax.nn.sigmoid(jax.random.normal(key, (Bs, Ss, H))) * 0.5 + 0.4
+    t_ref = time_call(lambda: ref.ssm_scan_ref(x, None, Bi, Ci, a))
+    rows.append({"name": "kernel_ssm_ref",
+                 "us_per_call": round(t_ref * 1e6, 1),
+                 "derived": f"state_vmem_kib={H*P*N*4/1024:.0f}"})
+    return rows

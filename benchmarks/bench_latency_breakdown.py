@@ -1,0 +1,31 @@
+"""Paper Fig. 12 — token-generation latency breakdown (model worker time,
+attention worker time, network time) across batch sizes at fixed context,
+rotational pipelining disabled (as the paper does for this figure)."""
+from __future__ import annotations
+
+from repro.configs import registry
+from repro.core import costmodel as cm
+
+
+def run():
+    rows = []
+    h100, h20 = cm.HARDWARE["h100"], cm.HARDWARE["h20"]
+    fhbn = cm.NETWORK_STACKS["fhbn"]
+    for model_name, dop in (("llama3-70b", (2, 4)),):
+        cfg = registry.get_config(model_name)
+        for l in (4096, 8192):
+            for B in (16, 64, 128, 256, 512):
+                t_m = cm.mtime(cfg, B, h100, dop[0])
+                t_a = cm.atime(cfg, B, l, h20, dop[1])
+                t_n = cm.network_time_per_iteration(cfg, B, fhbn,
+                                                    overlap_fraction=0.0)
+                tbt = t_m + t_a + t_n
+                rows.append({
+                    "name": f"fig12_{model_name}_l{l}_B{B}",
+                    "us_per_call": round(tbt * 1e6),
+                    "derived": (f"model_ms={t_m*1e3:.2f};"
+                                f"attn_ms={t_a*1e3:.2f};"
+                                f"net_ms={t_n*1e3:.2f};"
+                                f"model_frac={t_m/tbt:.2f}"),
+                })
+    return rows

@@ -1,0 +1,29 @@
+"""Paper Fig. 4 — minimum interconnect bandwidth for attention offloading
+(α = 0.2 latency headroom, H100 model workers + H20 attention workers)."""
+from __future__ import annotations
+
+from repro.configs import registry
+from repro.core import costmodel as cm
+
+
+def run():
+    l70 = registry.get_config("llama3-70b")
+    h100, h20 = cm.HARDWARE["h100"], cm.HARDWARE["h20"]
+    rows = []
+    for l in (2048, 4096, 8192):
+        for B in (8, 32, 100, 200, 300):
+            bw = cm.minimum_bandwidth(l70, B, l, h100, h20, alpha=0.2,
+                                      dop=(1, 1))
+            rows.append({
+                "name": f"fig4_minbw_B{B}_l{l}",
+                "us_per_call": 0,
+                "derived": (f"min_gbs={bw/1e9:.2f};"
+                            f"under_400gbe={bw < 50e9}"),
+            })
+    # paper claim: never above ~30 GB/s for B<=300
+    worst = max(cm.minimum_bandwidth(l70, B, l, h100, h20, 0.2, (1, 1))
+                for B in (8, 32, 100, 200, 300)
+                for l in (2048, 4096, 8192))
+    rows.append({"name": "fig4_claim_max_under_30gbs", "us_per_call": 0,
+                 "derived": f"worst_gbs={worst/1e9:.2f};claim_ok={worst<30e9}"})
+    return rows

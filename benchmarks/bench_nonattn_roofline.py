@@ -1,0 +1,43 @@
+"""Paper Fig. 2 — non-attention operator latency + MFU vs batch size.
+
+Two columns per point: the paper's H100 roofline-model projection (the
+dotted lines in Fig. 2, from core/costmodel) and a *measured* CPU-scale
+latency of the real non-attention computation (reduced llama3 layer) to show
+the same bandwidth-bound -> compute-bound transition shape."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import time_call
+from repro.configs import registry
+from repro.core import costmodel as cm
+
+BATCHES = [1, 4, 16, 64, 128, 256, 512, 1024]
+
+
+def run():
+    l70 = registry.get_config("llama3-70b")
+    h100 = cm.HARDWARE["h100"]
+    rows = []
+    # measured CPU micro-kernel: one decode iteration of QKVO+FFN GEMMs
+    cfg = registry.get_smoke_config("llama3-8b", d_model=512, d_ff=2048)
+    key = jax.random.PRNGKey(0)
+    w1 = jax.random.normal(key, (cfg.d_model, cfg.d_ff), jnp.float32)
+    w2 = jax.random.normal(key, (cfg.d_ff, cfg.d_model), jnp.float32)
+
+    @jax.jit
+    def nonattn(x):
+        return jax.nn.silu(x @ w1) @ w2
+
+    for B in BATCHES:
+        t_model = cm.mtime(l70, B, h100, efficiency=1.0)
+        mfu = cm.mfu_nonattention(l70, B, h100)
+        x = jax.random.normal(key, (B, cfg.d_model), jnp.float32)
+        t_meas = time_call(nonattn, x)
+        rows.append({
+            "name": f"fig2_nonattn_B{B}",
+            "us_per_call": round(t_meas * 1e6, 1),
+            "derived": f"h100_model_ms={t_model*1e3:.2f};mfu={mfu:.3f}",
+        })
+    return rows

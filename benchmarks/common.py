@@ -1,0 +1,31 @@
+"""Shared benchmark plumbing: each bench_* module exposes run() -> list of
+CSV rows (dicts). benchmarks.run executes them all and prints
+``name,us_per_call,derived`` style CSV plus per-figure tables."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+
+def time_call(fn: Callable, *args, warmup: int = 1, iters: int = 3,
+              **kw) -> float:
+    """Median wall time of fn(*args) in seconds (CPU-scale measurements)."""
+    import jax
+
+    for _ in range(warmup):
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def emit(rows: List[Dict], columns: List[str]) -> None:
+    print(",".join(columns))
+    for r in rows:
+        print(",".join(str(r.get(c, "")) for c in columns))

@@ -1,0 +1,55 @@
+"""Benchmark harness entry point — one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV (deliverable d).
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig10]
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import sys
+import time
+
+MODULES = [
+    ("fig2_nonattention_roofline", "benchmarks.bench_nonattn_roofline"),
+    ("fig3_attention_roofline", "benchmarks.bench_attn_roofline"),
+    ("fig4_minimum_bandwidth", "benchmarks.bench_min_bandwidth"),
+    ("fig10_serving_throughput", "benchmarks.bench_serving"),
+    ("fig11_dop_sweep", "benchmarks.bench_dop_sweep"),
+    ("fig12_latency_breakdown", "benchmarks.bench_latency_breakdown"),
+    ("fig13_network_stack", "benchmarks.bench_network"),
+    ("fig14_overlap_ablation", "benchmarks.bench_overlap"),
+    ("sec43_pipelining", "benchmarks.bench_pipeline"),
+    ("kernels_micro", "benchmarks.bench_kernels"),
+    ("sec7_extensions", "benchmarks.bench_extensions"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    failures = 0
+    for label, module_name in MODULES:
+        if args.only and args.only not in label:
+            continue
+        t0 = time.time()
+        try:
+            mod = importlib.import_module(module_name)
+            rows = mod.run()
+            for r in rows:
+                print(f"{r['name']},{r['us_per_call']},\"{r['derived']}\"")
+            print(f"# {label}: {len(rows)} rows in {time.time()-t0:.1f}s",
+                  file=sys.stderr)
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            import traceback
+            traceback.print_exc()
+            print(f"# {label}: FAILED {e}", file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

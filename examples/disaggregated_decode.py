@@ -1,0 +1,69 @@
+"""Walk through the paper's machinery end to end on one decode iteration:
+
+  1. the automated model converter slices a real transformer block at the
+     attention operator (min-cut finds the residual context, Q-Proj hoisted);
+  2. the sliced program executes with attention "offloaded" to a worker pool
+     (head-level partitioning, per-layer transfer accounting);
+  3. the rotational staggered pipeline runs 4 concurrent batches over 3
+     model replicas + the shared pool, provably bubble-free.
+
+  PYTHONPATH=src python examples/disaggregated_decode.py
+"""
+import jax
+import numpy as np
+
+from repro.configs import registry
+from repro.core import converter, pipeline
+from repro.models import blocks
+from repro.serving.disagg_engine import expected_transfer_bytes
+
+
+def main():
+    cfg = registry.get_smoke_config("llama3-8b")
+    w = blocks.init_dense_block(jax.random.PRNGKey(0), cfg)
+
+    print("== 1. automated model converter (paper §4.2) ==")
+    g = converter.build_block_graph(cfg, weights=w, batch=4)
+    sp = converter.split_at_attention(g)
+    print(f"graph: {len(g.order)} ops, {len(g.attention_ops())} attention op")
+    for sl in sp.slices:
+        print(f"  slice {sl.index}: {sl.program}")
+        if sl.context_out:
+            print(f"    min-cut context -> next slice: {sl.context_out} "
+                  f"({sp.cut_bytes[sl.index]} bytes)")
+        if sl.sends:
+            print(f"    transfers: {sl.sends}")
+
+    print("\n== 2. sliced execution with offloaded attention ==")
+    x = np.random.default_rng(0).standard_normal(
+        (4, cfg.d_model)).astype(np.float32)
+
+    sent = {"q": 0, "kv": 0}
+
+    def attention_worker(name, env):
+        q, k, v = env["q_proj"], env["k_proj"], env["v_proj"]
+        sent["q"] += q.size * 2
+        sent["kv"] += (k.size + v.size) * 2
+        return np.repeat(v, q.shape[1] // v.shape[1], axis=1)
+
+    trace = []
+    env = sp.run({"x": x}, attention_worker, trace=trace)
+    print("schedule:", " -> ".join(trace[:8]), "...")
+    print(f"bytes to attention pool: q={sent['q']} kv={sent['kv']} "
+          f"(paper §3.1 per-token formula for 1 layer: "
+          f"{expected_transfer_bytes(cfg.replace(num_layers=1), 4)} B)")
+    print(f"output shape: {env['residual2'].shape}")
+
+    print("\n== 3. rotational staggered pipelining (paper §4.3) ==")
+    s = pipeline.rotational_schedule(4, 6)
+    v = pipeline.validate(s)
+    u = pipeline.utilisation(s)
+    print(f"4 batches over 3 replicas + shared pool: {v}")
+    print(f"utilisation: attn={u['attn']:.3f} " +
+          " ".join(f"model:{r}={u[f'model:{r}']:.3f}" for r in range(3)))
+    print(f"throughput multiplier vs non-pipelined: "
+          f"{pipeline.throughput_speedup(4):.3f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,125 @@
+"""Input-shape definitions, ShapeDtypeStruct builders, and reduced (smoke)
+config derivation shared by all architecture configs."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+INPUT_SHAPES: Dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+# Modality frontend stub sizes (see DESIGN.md — the one allowed stub):
+# pixtral gets `frontend_tokens` patch embeddings prepended; seamless consumes
+# (B, S_enc, d) frame embeddings in the encoder.
+VLM_PATCHES_FRACTION = 0.25  # of seq_len, capped at frontend_tokens
+
+
+def frontend_len(cfg: ModelConfig, seq_len: int) -> int:
+    if cfg.modality != "vision":
+        return 0
+    return min(cfg.frontend_tokens, max(16, int(seq_len * VLM_PATCHES_FRACTION)))
+
+
+def input_specs(cfg: ModelConfig, shape_name: str,
+                max_seq: Optional[int] = None) -> Dict:
+    """ShapeDtypeStruct stand-ins for every model input of the entry point.
+
+    train  -> kwargs of train_step(batch=...)
+    prefill-> kwargs of prefill_step(batch=...)
+    decode -> kwargs of serve_step(tokens=..., cache=...)
+    """
+    from repro.models import transformer
+
+    shp = INPUT_SHAPES[shape_name]
+    B, S = shp.global_batch, shp.seq_len
+    i32 = jnp.int32
+
+    def sds(shape, dtype=i32):
+        return jax.ShapeDtypeStruct(shape, dtype)
+
+    if shp.kind in ("train", "prefill"):
+        if cfg.family == "audio":
+            # encoder consumes S frame-embeddings, decoder S//8 text tokens
+            S_dec = max(32, S // 8)
+            batch = {
+                "frames": sds((B, S, cfg.d_model), cfg.dtype),
+                "tokens": sds((B, S_dec)),
+            }
+            if shp.kind == "train":
+                batch["labels"] = sds((B, S_dec))
+        elif cfg.modality == "vision":
+            F = frontend_len(cfg, S)
+            batch = {
+                "frontend": sds((B, F, cfg.d_model), cfg.dtype),
+                "tokens": sds((B, S - F)),
+            }
+            if shp.kind == "train":
+                batch["labels"] = sds((B, S - F))
+        else:
+            batch = {"tokens": sds((B, S))}
+            if shp.kind == "train":
+                batch["labels"] = sds((B, S))
+        return {"batch": batch}
+
+    # decode: ONE new token against a cache of length seq_len
+    cache = jax.eval_shape(
+        lambda: transformer.init_cache(cfg, B, max_seq or S))
+    if cfg.family == "audio":
+        # cross-attention KV over the encoded utterance (S//8 frames kept)
+        hd = cfg.resolved_head_dim
+        S_enc = max(32, S // 8)
+        cache = dict(cache)
+        cache["ck"] = sds((cfg.num_layers, B, cfg.num_kv_heads, S_enc, hd),
+                          cfg.dtype)
+        cache["cv"] = sds((cfg.num_layers, B, cfg.num_kv_heads, S_enc, hd),
+                          cfg.dtype)
+    return {"tokens": sds((B,)), "cache": cache}
+
+
+def reduced(cfg: ModelConfig, **overrides) -> ModelConfig:
+    """Smoke-test variant of the same family: 2 layers, d_model<=512,
+    <=4 experts, tiny vocab."""
+    kw = dict(
+        num_layers=2,
+        d_model=min(cfg.d_model, 256),
+        num_heads=4,
+        num_kv_heads=min(cfg.num_kv_heads, 4) if cfg.num_kv_heads else 0,
+        head_dim=64,
+        d_ff=min(cfg.d_ff, 512),
+        vocab_size=min(cfg.vocab_size, 512),
+        dtype=jnp.float32,
+    )
+    if cfg.num_experts:
+        kw.update(num_experts=4, experts_per_token=2,
+                  moe_d_ff=min(cfg.moe_d_ff, 128))
+    if cfg.family == "hybrid":
+        kw.update(num_layers=5, shared_attn_period=2, num_heads=4,
+                  num_kv_heads=4, ssm_state=16, ssm_head_dim=32)
+    if cfg.family == "ssm":
+        kw.update(rwkv_head_dim=32)
+    if cfg.family == "audio":
+        kw.update(encoder_layers=2)
+    if cfg.local_global:
+        kw.update(num_layers=2, sliding_window=64)
+    if cfg.modality == "vision":
+        kw.update(frontend_tokens=16)
+    kw.update(overrides)
+    return cfg.replace(**kw)

@@ -1,0 +1,20 @@
+"""llama3-8b — dense GQA, 128k vocab [arXiv:2407.21783]."""
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama3-8b",
+    family="dense",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab_size=128256,
+    rope_theta=500000.0,
+    source="arXiv:2407.21783",
+)
+
+# Sliding-window variant used for the long_500k shape (DESIGN.md §4): the
+# config-level override that makes any dense arch sub-quadratic in memory.
+CONFIG_SW = CONFIG.replace(name="llama3-8b-sw8k", sliding_window=8192)

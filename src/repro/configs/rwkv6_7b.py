@@ -1,0 +1,21 @@
+"""rwkv6-7b — Finch: attention-free, data-dependent decay [arXiv:2404.05892].
+
+The paper's model-attention disaggregation is INAPPLICABLE here (no KV cache,
+no attention operator) — see DESIGN.md §4. Implemented without the technique;
+the recurrent state is head-sharded over the `model` mesh axis.
+"""
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-7b",
+    family="ssm",
+    num_layers=32,
+    d_model=4096,
+    num_heads=64,       # d_model / rwkv_head_dim
+    num_kv_heads=64,
+    head_dim=64,
+    rwkv_head_dim=64,
+    d_ff=14336,
+    vocab_size=65536,
+    source="arXiv:2404.05892",
+)

@@ -1,0 +1,144 @@
+"""Multi-device attention partitioning (paper §5 "Attention parallelism").
+
+The paper distributes decode attention over a pool of memory devices either
+request-level (imbalanced) or head-level (balanced, chosen by Lamina). On the
+TPU mesh we express both, plus the sequence-level split that the §4.2.2
+combine identity makes exact — the variant that serves `long_500k` where a
+single request's KV exceeds one chip:
+
+  * head-level:    KV cache heads sharded over the pool axis, no combine
+  * sequence-level: KV cache sequence sharded, partial triple + psum-combine
+  * request-level: batch sharded (the paper's rejected baseline, kept for the
+                    load-imbalance benchmark)
+
+All are written with ``shard_map`` so the per-layer boundary communication is
+explicit — these collectives are the TPU rendering of the paper's per-layer
+DCN transfers, and the dry-run's collective roofline term measures them.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import combine as C
+
+
+def _masked_partial(q, k_cache, v_cache, valid, logit_softcap=0.0):
+    """q: (B, H, hd); caches (B, S, Hkv, hd); valid: (B, S)."""
+    B, H, hd = q.shape
+    Hkv = k_cache.shape[2]
+    group = H // Hkv
+    qg = q.reshape(B, Hkv, group, hd)
+    # scores per kv head without materialising repeated KV
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    s = jnp.einsum("bhgk,bshk->bhgs", qg.astype(jnp.float32) * scale,
+                   k_cache.astype(jnp.float32))
+    if logit_softcap > 0.0:
+        s = logit_softcap * jnp.tanh(s / logit_softcap)
+    s = jnp.where(valid[:, None, None, :], s, -jnp.inf)
+    m = jnp.max(s, axis=-1)
+    m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+    p = jnp.where(jnp.isfinite(s), jnp.exp(s - m_safe[..., None]), 0.0)
+    denom = jnp.sum(p, axis=-1)
+    a = jnp.einsum("bhgs,bshk->bhgk", p, v_cache.astype(jnp.float32))
+    return C.Partial(a=a.reshape(B, H, hd), s=denom.reshape(B, H),
+                     m=jnp.where(jnp.isfinite(m), m, -jnp.inf).reshape(B, H))
+
+
+# ---------------------------------------------------------------------------
+# Sequence-level split (partial-combine across the pool axis)
+# ---------------------------------------------------------------------------
+def seq_parallel_decode_attention(mesh: Mesh, axis: str, q, k_cache, v_cache,
+                                  cache_len, *, sliding_window: int = 0,
+                                  logit_softcap: float = 0.0,
+                                  batch_axis: Optional[str] = None):
+    """Decode attention with the KV sequence sharded over `axis`.
+
+    q: (B, H, hd) replicated over `axis`; caches (B, S, Hkv, hd) with S
+    sharded over `axis`; cache_len (B,). Each shard computes its partial
+    (A, S, m) over its KV slice; psum_combine merges — the cross-chip form
+    of paper §4.2.2.
+    """
+    n = mesh.shape[axis]
+    S = k_cache.shape[1]
+    S_shard = S // n
+    bspec = P(batch_axis) if batch_axis else P()
+
+    def shard_fn(q, kc, vc, clen):
+        idx = jax.lax.axis_index(axis)
+        pos = idx * S_shard + jnp.arange(S_shard)[None, :]  # global positions
+        valid = pos < clen[:, None]
+        if sliding_window > 0:
+            valid &= pos >= (clen[:, None] - sliding_window)
+        part = _masked_partial(q, kc, vc, valid, logit_softcap)
+        return C.finalize(C.psum_combine(part, axis)).astype(q.dtype)
+
+    return jax.shard_map(
+        shard_fn, mesh=mesh,
+        in_specs=(P(batch_axis, None, None), P(batch_axis, axis, None, None),
+                  P(batch_axis, axis, None, None), bspec),
+        out_specs=P(batch_axis, None, None),
+    )(q, k_cache, v_cache, cache_len)
+
+
+# ---------------------------------------------------------------------------
+# Head-level split (the paper's choice for Lamina)
+# ---------------------------------------------------------------------------
+def head_parallel_decode_attention(mesh: Mesh, axis: str, q, k_cache, v_cache,
+                                   cache_len, *, sliding_window: int = 0,
+                                   logit_softcap: float = 0.0,
+                                   batch_axis: Optional[str] = None):
+    """KV heads sharded over `axis`; each device handles its heads fully.
+    Requires Hkv % mesh.shape[axis] == 0 (the paper's divisibility caveat).
+    """
+    Hkv = k_cache.shape[2]
+    n = mesh.shape[axis]
+    if Hkv % n:
+        raise ValueError(
+            f"head-level partitioning needs kv_heads ({Hkv}) divisible by "
+            f"pool size ({n}) — paper §5; use seq-level instead")
+    bspec = P(batch_axis) if batch_axis else P()
+
+    def shard_fn(q, kc, vc, clen):
+        S = kc.shape[1]
+        pos = jnp.arange(S)[None, :]
+        valid = pos < clen[:, None]
+        if sliding_window > 0:
+            valid &= pos >= (clen[:, None] - sliding_window)
+        part = _masked_partial(q, kc, vc, valid, logit_softcap)
+        return C.finalize(part).astype(q.dtype)
+
+    return jax.shard_map(
+        shard_fn, mesh=mesh,
+        in_specs=(P(batch_axis, axis, None), P(batch_axis, None, axis, None),
+                  P(batch_axis, None, axis, None), bspec),
+        out_specs=P(batch_axis, axis, None),
+    )(q, k_cache, v_cache, cache_len)
+
+
+# ---------------------------------------------------------------------------
+# Request-level split (paper's rejected baseline, for the imbalance bench)
+# ---------------------------------------------------------------------------
+def request_parallel_decode_attention(mesh: Mesh, axis: str, q, k_cache,
+                                      v_cache, cache_len, *,
+                                      sliding_window: int = 0,
+                                      logit_softcap: float = 0.0):
+    def shard_fn(q, kc, vc, clen):
+        S = kc.shape[1]
+        pos = jnp.arange(S)[None, :]
+        valid = pos < clen[:, None]
+        if sliding_window > 0:
+            valid &= pos >= (clen[:, None] - sliding_window)
+        return C.finalize(_masked_partial(q, kc, vc, valid,
+                                          logit_softcap)).astype(q.dtype)
+
+    return jax.shard_map(
+        shard_fn, mesh=mesh,
+        in_specs=(P(axis, None, None), P(axis, None, None, None),
+                  P(axis, None, None, None), P(axis)),
+        out_specs=P(axis, None, None),
+    )(q, k_cache, v_cache, cache_len)

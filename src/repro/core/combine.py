@@ -1,0 +1,96 @@
+"""Partial-softmax attention combine (paper §4.2.2).
+
+Given a disjoint split of the token set I = I1 ∪ I2, with per-subset partial
+results A_q(I) = Σ softmax-weighted values and S_q(I) = Σ exp(scores):
+
+    A_q(I) = (A_q(I1)·S_q(I1) + A_q(I2)·S_q(I2)) / (S_q(I1) + S_q(I2))
+
+This identity is what lets Lamina (a) split the KV set across memory devices
+(head- or sequence-wise), (b) overlap the `prev`-token attention with the
+K/V projection and transfer of the `new` token, and (c) tile the decode
+kernel over KV blocks in VMEM. We carry the running max `m` alongside
+(A, S) for numerical stability — the standard flash/online-softmax triple.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Partial(NamedTuple):
+    """Partial attention state for some subset of KV tokens.
+
+    a: (..., head_dim)  — softmax-weighted value sum, normalised *within* the
+                          subset relative to `m` (i.e. Σ exp(s-m) v / 1)
+    s: (...)            — Σ exp(score - m) over the subset
+    m: (...)            — max score over the subset
+    """
+    a: jax.Array
+    s: jax.Array
+    m: jax.Array
+
+
+def partial_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                      mask: jax.Array | None = None,
+                      logit_softcap: float = 0.0) -> Partial:
+    """Compute the partial triple over one KV subset.
+
+    q: (..., hd); k, v: (..., n, hd); mask: (..., n) True=attend.
+    """
+    hd = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    s = jnp.einsum("...k,...nk->...n", q.astype(jnp.float32) * scale,
+                   k.astype(jnp.float32))
+    if logit_softcap > 0.0:
+        s = logit_softcap * jnp.tanh(s / logit_softcap)
+    if mask is not None:
+        s = jnp.where(mask, s, -jnp.inf)
+    m = jnp.max(s, axis=-1)
+    m_safe = jnp.where(jnp.isfinite(m), m, 0.0)  # empty subsets
+    p = jnp.exp(s - m_safe[..., None])
+    p = jnp.where(jnp.isfinite(s), p, 0.0)
+    denom = jnp.sum(p, axis=-1)
+    a = jnp.einsum("...n,...nk->...k", p, v.astype(jnp.float32))
+    return Partial(a=a, s=denom, m=jnp.where(jnp.isfinite(m), m, -jnp.inf))
+
+
+def combine(p1: Partial, p2: Partial) -> Partial:
+    """Associative, commutative merge of two disjoint partials."""
+    m = jnp.maximum(p1.m, p2.m)
+    m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+    w1 = jnp.where(jnp.isfinite(p1.m), jnp.exp(p1.m - m_safe), 0.0)
+    w2 = jnp.where(jnp.isfinite(p2.m), jnp.exp(p2.m - m_safe), 0.0)
+    return Partial(
+        a=p1.a * w1[..., None] + p2.a * w2[..., None],
+        s=p1.s * w1 + p2.s * w2,
+        m=m,
+    )
+
+
+def finalize(p: Partial) -> jax.Array:
+    """Partial -> attention output (normalise by the denominator)."""
+    return p.a / jnp.maximum(p.s, 1e-30)[..., None]
+
+
+def combine_many(partials: list[Partial]) -> Partial:
+    out = partials[0]
+    for p in partials[1:]:
+        out = combine(out, p)
+    return out
+
+
+def psum_combine(p: Partial, axis_name: str) -> Partial:
+    """Cross-device combine over a mesh axis (inside shard_map).
+
+    Rebases every shard's partial onto the global max, then psums — the
+    cross-chip form of the paper's A/S merge used for sequence-parallel
+    attention (DESIGN.md §3.3).
+    """
+    m_global = jax.lax.pmax(p.m, axis_name)
+    m_safe = jnp.where(jnp.isfinite(m_global), m_global, 0.0)
+    w = jnp.where(jnp.isfinite(p.m), jnp.exp(p.m - m_safe), 0.0)
+    a = jax.lax.psum(p.a * w[..., None], axis_name)
+    s = jax.lax.psum(p.s * w, axis_name)
+    return Partial(a=a, s=s, m=m_global)

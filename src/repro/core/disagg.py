@@ -1,0 +1,286 @@
+"""Model-attention disaggregation config + sharding rules (paper §3/§4).
+
+On the TPU mesh the paper's two device pools become two *sharding domains*
+(DESIGN.md §3.1):
+
+  * dense weights — tensor-parallel over the ``model`` axis (Megatron-style
+    col/row pairs), optionally FSDP over ``data`` for the 1T-param config;
+  * KV caches / recurrent state — the "memory pool": batch over ``data``,
+    and the attention partition over the pool axis — ``head`` (paper's
+    choice), ``seq`` (partial-combine, used when kv-heads don't divide or
+    batch=1 long-context), or ``request`` (the rejected baseline).
+
+``specs_for_params`` mirrors any params pytree with PartitionSpecs using
+semantic rules for known structures + a divisibility-guarded generic rule,
+so every assigned architecture lowers on the production mesh without
+hand-written per-arch tables.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.common import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class DisaggConfig:
+    """Degrees of parallelism and partition strategy (paper §3.1, §5)."""
+    dop: Tuple[int, int] = (2, 4)          # (model workers, attention workers)
+    attention_partition: str = "head"       # head | seq | request
+    fsdp: bool = False                      # shard weights over data too
+    decode_backend: str = "jnp"             # jnp | pallas
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+def _div(n: int, mesh: Mesh, axis: str) -> bool:
+    return axis in mesh.shape and n % mesh.shape[axis] == 0
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+    return "/".join(parts)
+
+
+# ---------------------------------------------------------------------------
+# Parameter sharding
+# ---------------------------------------------------------------------------
+def specs_for_params(cfg: ModelConfig, params_shape: Any, mesh: Mesh,
+                     fsdp: bool = False) -> Any:
+    """PartitionSpec pytree mirroring `params_shape` (a ShapeDtypeStruct
+    tree from jax.eval_shape(init_params, ...))."""
+
+    def rule(path, leaf) -> P:
+        name = _path_str(path)
+        shape = leaf.shape
+        parts = name.split("/")
+        stacked = name.startswith(("layers", "enc_layers", "tail"))
+        # number of leading stacking dims (zamba mamba layers are (S, P, ...))
+        # — reduced by list-layout path indices ("layers/3/..." has none)
+        lead = 0
+        if stacked:
+            lead = 1
+            if name.startswith("layers") and cfg.family == "hybrid":
+                lead = 2
+            lead -= sum(1 for p in parts[1:3] if p.isdigit())
+            lead = max(lead, 0)
+        dims: list = [None] * len(shape)
+
+        def set_axis(i, axis):
+            dims[i] = axis
+
+        base = name.split("/")[-1]
+        if name == "embed":
+            if _div(shape[0], mesh, "model"):
+                set_axis(0, "model")
+            return P(*dims)
+        if name == "lm_head":
+            if _div(shape[1], mesh, "model"):
+                set_axis(1, "model")
+            return P(*dims)
+        if len(shape) - lead < 2:  # norms, biases, scalars
+            return P(*dims)
+
+        if base in ("wq", "wk", "wv"):           # (..., d, H, hd)
+            h_i = lead + 1
+            if _div(shape[h_i], mesh, "model"):
+                set_axis(h_i, "model")
+            elif _div(shape[h_i + 1], mesh, "model") and \
+                    shape[h_i + 1] // mesh.shape["model"] >= 8:
+                # kv-heads don't divide the axis (llama kv=8, glm kv=2 at
+                # 16-way): shard head_dim instead of replicating — keeps the
+                # K/V projections (and their fp32 Adam moments) distributed
+                # (§Perf follow-up; RoPE pairs stay intact because hd/16 >= 8
+                # keeps the rotate-half split aligned per shard... see note)
+                set_axis(h_i + 1, "model")
+            elif fsdp and _div(shape[lead], mesh, "data"):
+                set_axis(lead, "data")
+            if fsdp and dims[lead] is None and _div(shape[lead], mesh, "data"):
+                set_axis(lead, "data")
+            return P(*dims)
+        if base == "wo":                          # (..., H, hd, d)
+            if _div(shape[lead], mesh, "model"):
+                set_axis(lead, "model")
+            if fsdp and _div(shape[-1], mesh, "data"):
+                set_axis(len(shape) - 1, "data")
+            return P(*dims)
+        if "moe" in name and base in ("w_gate", "w_up", "w_down"):
+            # (..., E, d, f) expert-parallel over model
+            if _div(shape[lead], mesh, "model"):
+                set_axis(lead, "model")
+            if fsdp and _div(shape[lead + 1], mesh, "data"):
+                set_axis(lead + 1, "data")
+            return P(*dims)
+        if base in ("w_gate", "w_up", "w_fc"):    # (..., d, f) col-parallel
+            if _div(shape[-1], mesh, "model"):
+                set_axis(len(shape) - 1, "model")
+            if fsdp and _div(shape[-2], mesh, "data"):
+                set_axis(len(shape) - 2, "data")
+            return P(*dims)
+        if base in ("w_down", "w_proj"):          # (..., f, d) row-parallel
+            if _div(shape[-2], mesh, "model"):
+                set_axis(len(shape) - 2, "model")
+            if fsdp and _div(shape[-1], mesh, "data"):
+                set_axis(len(shape) - 1, "data")
+            return P(*dims)
+        if base == "router":
+            return P(*dims)                       # small, replicated
+        # generic 2D+ rule: last dim over model if divisible, else previous
+        if _div(shape[-1], mesh, "model"):
+            set_axis(len(shape) - 1, "model")
+        elif _div(shape[-2], mesh, "model"):
+            set_axis(len(shape) - 2, "model")
+        if fsdp:
+            for i in range(lead, len(shape)):
+                if dims[i] is None and _div(shape[i], mesh, "data"):
+                    set_axis(i, "data")
+                    break
+        return P(*dims)
+
+    return jax.tree_util.tree_map_with_path(rule, params_shape)
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache / activation sharding
+# ---------------------------------------------------------------------------
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """Axes that carry the global batch: ('pod','data') on multi-pod."""
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def specs_for_batch(cfg: ModelConfig, batch_shape: Dict, mesh: Mesh) -> Dict:
+    baxes = batch_axes(mesh)
+
+    def rule(path, leaf):
+        B = leaf.shape[0]
+        total = 1
+        use = []
+        for a in baxes:
+            if B % (total * mesh.shape[a]) == 0:
+                use.append(a)
+                total *= mesh.shape[a]
+        spec = [tuple(use) if use else None] + [None] * (len(leaf.shape) - 1)
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(rule, batch_shape)
+
+
+def specs_for_cache(cfg: ModelConfig, cache_shape: Dict, mesh: Mesh,
+                    attention_partition: str = "auto") -> Dict:
+    """The memory-pool shardings (paper §5 'Attention parallelism').
+
+    head  — KV head dim over `model` (needs divisibility)
+    seq   — KV sequence dim over `model` (+ data when batch can't shard)
+    auto  — head if divisible else seq (logged by the launcher)
+
+    Handles both layouts: stacked ((L, B, S, ...) single buffers) and the
+    per-layer LIST layout used by the unrolled cost/production lowering
+    (paths like "k/3" with the leading layer dims gone).
+    """
+    baxes = batch_axes(mesh)
+
+    def batch_spec(B):
+        use, total = [], 1
+        for a in baxes:
+            if B % (total * mesh.shape[a]) == 0:
+                use.append(a)
+                total *= mesh.shape[a]
+        return tuple(use) if use else None, total
+
+    def rule(path, leaf):
+        parts = _path_str(path).split("/")
+        base = parts[0]
+        shape = leaf.shape
+        if base == "len":
+            bs, _ = batch_spec(shape[0])
+            return P(bs)
+
+        def dims_for(expected_rank, fill):
+            """Build a spec for a leaf whose last `expected_rank` dims carry
+            the semantics in `fill` (leading stacking dims -> None)."""
+            lead = len(shape) - expected_rank
+            return P(*([None] * lead + fill))
+
+        if base in ("k", "v", "ck", "cv"):
+            # semantic dims: HEAD-MAJOR (B, Hkv, S, hd)
+            B, Hkv, S = shape[-4], shape[-3], shape[-2]
+            bs, _ = batch_spec(B)
+            part = attention_partition
+            if part == "auto":
+                part = "head" if _div(Hkv, mesh, "model") else "seq"
+            fill = [bs, None, None, None]
+            if part == "head" and _div(Hkv, mesh, "model"):
+                fill[1] = "model"
+            elif _div(S, mesh, "model"):
+                fill[2] = "model"
+                if bs is None:  # batch=1 long-context: spread S wider
+                    extra = [a for a in baxes
+                             if S % (mesh.shape[a] * mesh.shape["model"])
+                             == 0]
+                    if extra:
+                        fill[2] = (extra[0], "model")
+            return dims_for(4, fill)
+        if base in ("k_scale", "v_scale"):  # int8 KV scales (B, Hkv, S)
+            B, Hkv, S = shape[-3], shape[-2], shape[-1]
+            bs, _ = batch_spec(B)
+            part = attention_partition
+            if part == "auto":
+                part = "head" if _div(Hkv, mesh, "model") else "seq"
+            fill = [bs, None, None]
+            if part == "head" and _div(Hkv, mesh, "model"):
+                fill[1] = "model"
+            elif _div(S, mesh, "model"):
+                fill[2] = "model"
+                if bs is None:
+                    extra = [a for a in baxes
+                             if S % (mesh.shape[a] * mesh.shape["model"])
+                             == 0]
+                    if extra:
+                        fill[2] = (extra[0], "model")
+            return dims_for(3, fill)
+        if base in ("k_new", "v_new"):  # (B, Hkv, hd)
+            bs, _ = batch_spec(shape[-3])
+            return dims_for(3, [bs, "model" if _div(shape[-2], mesh, "model")
+                                else None, None])
+        if base == "S":                 # rwkv state (B, H, P, P)
+            bs, _ = batch_spec(shape[-4])
+            return dims_for(4, [bs, "model" if _div(shape[-3], mesh, "model")
+                                else None, None, None])
+        if base in ("h", "tail_h"):     # mamba (B, H, P, N)
+            bs, _ = batch_spec(shape[-4])
+            return dims_for(4, [bs, "model" if _div(shape[-3], mesh, "model")
+                                else None, None, None])
+        if base in ("conv", "tail_conv"):  # (B, K-1, ch)
+            bs, _ = batch_spec(shape[-3])
+            return dims_for(3, [bs, None,
+                                "model" if _div(shape[-1], mesh, "model")
+                                else None])
+        if base in ("x_tm", "x_cm"):    # (B, d)
+            bs, _ = batch_spec(shape[-2])
+            return dims_for(2, [bs, "model" if _div(shape[-1], mesh, "model")
+                                else None])
+        bs, _ = batch_spec(shape[0]) if shape else (None, 1)
+        return P(*([bs] + [None] * (len(shape) - 1)))
+
+    return jax.tree_util.tree_map_with_path(rule, cache_shape)
+
+
+def logits_spec(cfg: ModelConfig, mesh: Mesh, batch: int) -> P:
+    baxes, total = [], 1
+    for a in batch_axes(mesh):
+        if batch % (total * mesh.shape[a]) == 0:
+            baxes.append(a)
+            total *= mesh.shape[a]
+    return P(tuple(baxes) if baxes else None,
+             "model" if _div(cfg.vocab_size, mesh, "model") else None)

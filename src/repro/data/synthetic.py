@@ -1,0 +1,69 @@
+"""Synthetic data pipeline: a deterministic Zipfian "language" with enough
+local structure (bigram templates) that a ~100M model's loss visibly drops —
+so training examples demonstrate real learning without external datasets.
+Includes sequence packing with document boundaries."""
+from __future__ import annotations
+
+from typing import Dict, Iterator, Optional
+
+import numpy as np
+
+
+class SyntheticCorpus:
+    """Markov bigram corpus over a Zipf vocabulary."""
+
+    def __init__(self, vocab_size: int, seed: int = 0,
+                 branching: int = 8):
+        self.vocab = vocab_size
+        rng = np.random.default_rng(seed)
+        # each token deterministically prefers `branching` successors
+        self.next_tokens = rng.integers(0, vocab_size,
+                                        size=(vocab_size, branching))
+        ranks = np.arange(1, vocab_size + 1, dtype=np.float64)
+        p = 1.0 / ranks
+        self.start_p = p / p.sum()
+
+    def document(self, rng: np.random.Generator, length: int) -> np.ndarray:
+        doc = np.empty(length, np.int64)
+        doc[0] = rng.choice(self.vocab, p=self.start_p)
+        choices = rng.integers(0, self.next_tokens.shape[1], size=length)
+        noise = rng.random(length)
+        for i in range(1, length):
+            if noise[i] < 0.1:  # 10% noise keeps entropy non-trivial
+                doc[i] = rng.integers(0, self.vocab)
+            else:
+                doc[i] = self.next_tokens[doc[i - 1], choices[i]]
+        return doc
+
+
+def packed_batches(vocab_size: int, batch: int, seq_len: int,
+                   seed: int = 0, doc_len_range=(64, 512),
+                   frontend_shape=None, frames_shape=None,
+                   dtype=None) -> Iterator[Dict]:
+    """Yields {'tokens', 'labels', 'mask'} batches of packed documents.
+    Optionally attaches stub modality inputs (vlm/audio smoke paths)."""
+    import jax.numpy as jnp
+
+    corpus = SyntheticCorpus(vocab_size, seed)
+    rng = np.random.default_rng(seed + 1)
+    while True:
+        toks = np.empty((batch, seq_len), np.int32)
+        mask = np.ones((batch, seq_len), np.float32)
+        for b in range(batch):
+            pos = 0
+            while pos < seq_len:
+                n = int(rng.integers(*doc_len_range))
+                doc = corpus.document(rng, n)[: seq_len - pos]
+                toks[b, pos:pos + len(doc)] = doc
+                pos += len(doc)
+        labels = np.concatenate([toks[:, 1:], toks[:, :1]], axis=1)
+        mask[:, -1] = 0.0
+        out = {"tokens": jnp.asarray(toks), "labels": jnp.asarray(labels),
+               "mask": jnp.asarray(mask)}
+        if frontend_shape is not None:
+            out["frontend"] = jnp.asarray(
+                rng.standard_normal(frontend_shape), dtype)
+        if frames_shape is not None:
+            out["frames"] = jnp.asarray(
+                rng.standard_normal(frames_shape), dtype)
+        yield out

@@ -1,0 +1,141 @@
+"""Flash-decode GQA attention Pallas kernel (the paper's BGEMV hot-spot).
+
+TPU adaptation of the attention operator Lamina offloads: the KV sequence is
+tiled into `block_k` chunks streamed HBM→VMEM; per chunk the kernel computes
+the partial triple (acc, denom, max) and merges it with the running state
+using exactly the paper-§4.2.2 combine identity (``core/combine.py``). The
+grid's KV dimension is innermost so the output block is revisited and the
+scratch accumulators carry across chunks — the single-chip realisation of
+split-KV attention, and the same math the cross-chip sequence partition uses.
+
+Layout notes (TPU v5e):
+  * k/v blocks are (block_k, hd) with hd padded to the 128-lane register
+    width by the wrapper; block_k defaults to 512 → 512×128×2B = 128 KiB per
+    operand in VMEM.
+  * q is (G, hd) per kv-head (GQA group in sublanes); scores (G, block_k)
+    hit the MXU as a skinny matmul.
+  * accumulators are fp32 scratch; inputs may be bf16.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_attn_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, lo_ref, mo_ref,
+                        acc_ref, m_ref, l_ref, *,
+                        block_k: int, sliding_window: int,
+                        attention_sinks: int, logit_softcap: float, nb: int):
+    kb = pl.program_id(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)          # (G, hd)
+    k = k_ref[0, 0].astype(jnp.float32)          # (block_k, hd) head-major
+    v = v_ref[0, 0].astype(jnp.float32)
+    cache_len = len_ref[0]
+
+    hd = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    s = jax.lax.dot_general(q * scale, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (G, block_k)
+    if logit_softcap > 0.0:
+        s = logit_softcap * jnp.tanh(s / logit_softcap)
+    pos = kb * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    valid = pos < cache_len
+    if sliding_window > 0:
+        in_window = pos >= (cache_len - sliding_window)
+        if attention_sinks > 0:  # StreamingLLM sinks stay attendable
+            in_window |= pos < attention_sinks
+        valid &= in_window
+    s = jnp.where(valid, s, NEG_INF)
+
+    # paper §4.2.2 combine: rebase running (acc, l) onto the new max
+    m_prev = m_ref[...]                           # (G, 128) broadcast lanes
+    m_cur = jnp.max(s, axis=-1, keepdims=True)    # (G, 1)
+    m_new = jnp.maximum(m_prev, jnp.broadcast_to(m_cur, m_prev.shape))
+    alpha = jnp.exp(m_prev[:, :1] - m_new[:, :1])  # (G, 1)
+    p = jnp.exp(s - m_new[:, :1])                  # (G, block_k)
+    p = jnp.where(valid, p, 0.0)
+    l_new = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+    l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(kb == nb - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[:, :1], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+        lo_ref[0, 0] = l_ref[...]   # partial denominator (for §4.2.2 combine)
+        mo_ref[0, 0] = m_ref[...]   # partial max
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "sliding_window",
+                                             "attention_sinks",
+                                             "logit_softcap", "interpret",
+                                             "return_partials"))
+def decode_attention(q, k_cache, v_cache, cache_len, *, block_k: int = 512,
+                     sliding_window: int = 0, attention_sinks: int = 0,
+                     logit_softcap: float = 0.0,
+                     interpret: bool = False,
+                     return_partials: bool = False):
+    """q: (B, Hkv, G, hd); k_cache/v_cache: HEAD-MAJOR (B, Hkv, S, hd);
+    cache_len: (B,). Returns (B, Hkv, G, hd), or (o, l, m) when
+    return_partials — the §4.2.2 triple over the cached subset, mergeable
+    with other partials. Head-major KV keeps the (block_k, hd) tile a
+    contiguous DMA (§Perf #3)."""
+    B, Hkv, G, hd = q.shape
+    S = k_cache.shape[2]
+    block_k = min(block_k, S)
+    nb = -(-S // block_k)
+    pad = nb * block_k - S
+    if pad:
+        cfgpad = [(0, 0), (0, 0), (0, pad), (0, 0)]
+        k_cache = jnp.pad(k_cache, cfgpad)
+        v_cache = jnp.pad(v_cache, cfgpad)
+
+    kernel = functools.partial(
+        _decode_attn_kernel, block_k=block_k, sliding_window=sliding_window,
+        attention_sinks=attention_sinks, logit_softcap=logit_softcap, nb=nb)
+    grid = (B, Hkv, nb)
+    out, l_out, m_out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, kb: (b,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, kb: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, hd), lambda b, h, kb: (b, h, kb, 0)),
+            pl.BlockSpec((1, 1, block_k, hd), lambda b, h, kb: (b, h, kb, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, kb: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, G, 128), lambda b, h, kb: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, G, 128), lambda b, h, kb: (b, h, 0, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((B, Hkv, G, hd), q.dtype),
+            jax.ShapeDtypeStruct((B, Hkv, G, 128), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hkv, G, 128), jnp.float32),
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((G, hd), jnp.float32),    # acc
+            pltpu.VMEM((G, 128), jnp.float32),   # running max (lane bcast)
+            pltpu.VMEM((G, 128), jnp.float32),   # running denom
+        ],
+        interpret=interpret,
+    )(cache_len, q, k_cache, v_cache)
+    if return_partials:
+        return out, l_out[..., 0], m_out[..., 0]
+    return out

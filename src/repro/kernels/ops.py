@@ -1,0 +1,73 @@
+"""jit'd dispatch wrappers around the Pallas kernels.
+
+On CPU (this container) the kernels run with interpret=True; on TPU the same
+call sites compile the Mosaic kernels. ``repro.models.attention`` registers
+the decode kernel as the "pallas" backend so any model's serve path can
+switch with ``DisaggConfig.decode_backend``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import decode_attention as _da
+from repro.kernels import rwkv6_scan as _rw
+from repro.kernels import ssm_scan as _ssm
+
+_INTERPRET = jax.default_backend() == "cpu"
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *, block_k: int = 512,
+                     sliding_window: int = 0, logit_softcap: float = 0.0):
+    """q: (B, H, hd); caches HEAD-MAJOR (B, Hkv, S, hd) (kernels/ref.py)."""
+    B, H, hd = q.shape
+    Hkv = k_cache.shape[1]
+    G = H // Hkv
+    qg = q.reshape(B, Hkv, G, hd)
+    out = _da.decode_attention(qg, k_cache, v_cache, cache_len,
+                               block_k=block_k, sliding_window=sliding_window,
+                               logit_softcap=logit_softcap,
+                               interpret=_INTERPRET)
+    return out.reshape(B, H, hd)
+
+
+def rwkv6_scan(r, k, v, w, u, *, chunk: int = 128):
+    return _rw.rwkv6_scan(r, k, v, w, u, chunk=chunk, interpret=_INTERPRET)
+
+
+def ssm_scan(x, B_in, C_in, decay, *, chunk: int = 128):
+    return _ssm.ssm_scan(x, B_in, C_in, decay, chunk=chunk,
+                         interpret=_INTERPRET)
+
+
+# --- register the Pallas decode backend with the model layer --------------
+def _pallas_decode_partial_backend(q, k_cache, v_cache, cache_len, *,
+                                   sliding_window: int = 0,
+                                   attention_sinks: int = 0,
+                                   logit_softcap: float = 0.0):
+    """Partial triple over the cached prefix (model-layer backend contract:
+    cache_len = stored tokens, window is w.r.t. total length cache_len+1)."""
+    from repro.core.combine import Partial
+
+    B, H, hd = q.shape
+    Hkv = k_cache.shape[1]  # head-major cache (B, Hkv, S, hd)
+    G = H // Hkv
+    qg = q.reshape(B, Hkv, G, hd)
+    sw = max(sliding_window - 1, 0) if sliding_window > 0 else 0
+    o, l, m = _da.decode_attention(
+        qg, k_cache, v_cache, cache_len, sliding_window=sw,
+        attention_sinks=attention_sinks, logit_softcap=logit_softcap,
+        interpret=_INTERPRET, return_partials=True)
+    return Partial(a=o.astype(jnp.float32).reshape(B, H, hd) *
+                   l.reshape(B, H)[..., None],
+                   s=l.reshape(B, H), m=m.reshape(B, H))
+
+
+def register():
+    from repro.models.attention import register_decode_backend
+    register_decode_backend("pallas", _pallas_decode_partial_backend)
+
+
+register()

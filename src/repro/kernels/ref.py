@@ -1,0 +1,77 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract the
+shape/dtype sweep tests assert against)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k_cache, v_cache, cache_len, *,
+                         sliding_window: int = 0, attention_sinks: int = 0,
+                         logit_softcap: float = 0.0) -> jax.Array:
+    """q: (B, Hkv, G, hd); caches: HEAD-MAJOR (B, Hkv, S, hd); cache_len:
+    (B,). Returns (B, Hkv, G, hd). fp32 math throughout."""
+    B, Hkv, G, hd = q.shape
+    S = k_cache.shape[2]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    s = jnp.einsum("bhgk,bhsk->bhgs", q.astype(jnp.float32) * scale,
+                   k_cache.astype(jnp.float32))
+    if logit_softcap > 0.0:
+        s = logit_softcap * jnp.tanh(s / logit_softcap)
+    pos = jnp.arange(S)[None, :]
+    valid = pos < cache_len[:, None]
+    if sliding_window > 0:
+        in_window = pos >= (cache_len[:, None] - sliding_window)
+        if attention_sinks > 0:
+            in_window |= pos < attention_sinks
+        valid &= in_window
+    s = jnp.where(valid[:, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgs,bhsk->bhgk", p, v_cache.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def rwkv6_scan_ref(r, k, v, w, u) -> jax.Array:
+    """RWKV6 recurrence oracle.
+
+    r, k, v, w: (B, S, H, P) (w = per-step decay in (0,1), fp32 math);
+    u: (H, P) bonus. Returns y: (B, S, H, P), fp32.
+      y_t = r_t · (S_{t-1} + u ⊙ k_t ⊗ v_t);  S_t = w_t ⊙ S_{t-1} + k_t ⊗ v_t
+    """
+    B, S, H, P = r.shape
+    rf, kf, vf, wf = [a.astype(jnp.float32) for a in (r, k, v, w)]
+    uf = u.astype(jnp.float32)
+
+    def step(state, inp):
+        r_t, k_t, v_t, w_t = inp  # (B, H, P)
+        kv = k_t[..., :, None] * v_t[..., None, :]  # (B, H, P, P)
+        y = jnp.einsum("bhp,bhpq->bhq", r_t, state + uf[..., None] * kv)
+        return w_t[..., :, None] * state + kv, y
+
+    xs = tuple(a.transpose(1, 0, 2, 3) for a in (rf, kf, vf, wf))
+    _, ys = jax.lax.scan(step, jnp.zeros((B, H, P, P), jnp.float32), xs)
+    return ys.transpose(1, 0, 2, 3)
+
+
+def ssm_scan_ref(x, dt, B_in, C_in, decay) -> jax.Array:
+    """Mamba2 scalar-decay SSD oracle.
+
+    x: (B, S, H, P) (already dt-scaled inputs), dt unused placeholder kept
+    for API parity; B_in, C_in: (B, S, N); decay: (B, S, H) in (0,1].
+    Returns y: (B, S, H, P) fp32:  h_t = decay_t h_{t-1} + x_t ⊗ B_t;
+    y_t = h_t · C_t.
+    """
+    Bb, S, H, P = x.shape
+    N = B_in.shape[-1]
+
+    def step(h, inp):
+        x_t, b_t, c_t, a_t = inp
+        h = h * a_t[:, :, None, None] + x_t[..., None] * b_t[:, None, None, :]
+        return h, jnp.einsum("bhpn,bn->bhp", h, c_t)
+
+    xs = (x.astype(jnp.float32).transpose(1, 0, 2, 3),
+          B_in.astype(jnp.float32).transpose(1, 0, 2),
+          C_in.astype(jnp.float32).transpose(1, 0, 2),
+          decay.astype(jnp.float32).transpose(1, 0, 2))
+    _, ys = jax.lax.scan(step, jnp.zeros((Bb, H, P, N), jnp.float32), xs)
+    return ys.transpose(1, 0, 2, 3)

@@ -1,0 +1,73 @@
+"""RWKV6 (Finch) recurrence Pallas kernel.
+
+TPU adaptation of the data-dependent-decay linear-attention scan: the
+sequence is tiled into `chunk` blocks streamed into VMEM; the (P, P)
+per-head state lives in fp32 VMEM scratch and carries across chunk blocks
+(innermost grid dim), so HBM traffic is O(S·P) instead of O(S·P²). Inside a
+chunk the recurrence is a fori_loop over timesteps on VMEM-resident data:
+
+    y_t = r_t · S + (r_t · (u ⊙ k_t)) v_t
+    S  <- diag(w_t) S + k_t ⊗ v_t
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rwkv6_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, y_ref, state_ref, *,
+                  chunk: int, n_chunks: int):
+    cb = pl.program_id(2)
+
+    @pl.when(cb == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    u = u_ref[0].astype(jnp.float32)  # (P,)
+
+    def step(t, state):
+        r_t = r_ref[0, t, 0, :].astype(jnp.float32)
+        k_t = k_ref[0, t, 0, :].astype(jnp.float32)
+        v_t = v_ref[0, t, 0, :].astype(jnp.float32)
+        w_t = w_ref[0, t, 0, :].astype(jnp.float32)
+        # y = r·S + (r·(u⊙k)) v   (avoids materialising u⊙k⊗v)
+        y = jnp.einsum("p,pq->q", r_t, state,
+                       preferred_element_type=jnp.float32)
+        y = y + jnp.sum(r_t * u * k_t) * v_t
+        y_ref[0, t, 0, :] = y.astype(y_ref.dtype)
+        return w_t[:, None] * state + k_t[:, None] * v_t[None, :]
+
+    state_ref[...] = jax.lax.fori_loop(0, chunk, step, state_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def rwkv6_scan(r, k, v, w, u, *, chunk: int = 128,
+               interpret: bool = False) -> jax.Array:
+    """r/k/v/w: (B, S, H, P); u: (H, P). Returns y: (B, S, H, P) fp32."""
+    B, S, H, P = r.shape
+    chunk = min(chunk, S)
+    n_chunks = -(-S // chunk)
+    pad = n_chunks * chunk - S
+    if pad:
+        padc = [(0, 0), (0, pad), (0, 0), (0, 0)]
+        r, k, v = (jnp.pad(a, padc) for a in (r, k, v))
+        w = jnp.pad(w, padc, constant_values=1.0)
+
+    kernel = functools.partial(_rwkv6_kernel, chunk=chunk, n_chunks=n_chunks)
+    seq_spec = pl.BlockSpec((1, chunk, 1, P), lambda b, h, c: (b, c, h, 0))
+    y = pl.pallas_call(
+        kernel,
+        grid=(B, H, n_chunks),
+        in_specs=[seq_spec, seq_spec, seq_spec, seq_spec,
+                  pl.BlockSpec((1, P), lambda b, h, c: (h, 0))],
+        out_specs=seq_spec,
+        out_shape=jax.ShapeDtypeStruct((B, n_chunks * chunk, H, P),
+                                       jnp.float32),
+        scratch_shapes=[pltpu.VMEM((P, P), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u)
+    return y[:, :S]

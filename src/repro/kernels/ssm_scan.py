@@ -1,0 +1,75 @@
+"""Mamba2 (scalar-decay SSD) selective-scan Pallas kernel.
+
+Sequence tiled into `chunk` VMEM blocks; the (H, P, N) fp32 state carries in
+VMEM scratch across the innermost grid dimension. All heads of one batch
+element are processed per grid step so the B_t/C_t projections are shared
+across heads (they are head-independent in Mamba2's single-group layout):
+
+    h_t = decay_t ⊙ h_{t-1} + (x_t·dt_t) ⊗ B_t ;   y_t = h_t · C_t
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssm_kernel(x_ref, b_ref, c_ref, a_ref, y_ref, state_ref, *,
+                chunk: int):
+    cb = pl.program_id(1)
+
+    @pl.when(cb == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    def step(t, h):
+        x_t = x_ref[0, t].astype(jnp.float32)      # (H, P)
+        b_t = b_ref[0, t].astype(jnp.float32)      # (N,)
+        c_t = c_ref[0, t].astype(jnp.float32)      # (N,)
+        a_t = a_ref[0, t].astype(jnp.float32)      # (H,)
+        h = h * a_t[:, None, None] + x_t[..., None] * b_t[None, None, :]
+        y = jnp.einsum("hpn,n->hp", h, c_t,
+                       preferred_element_type=jnp.float32)
+        y_ref[0, t] = y.astype(y_ref.dtype)
+        return h
+
+    state_ref[...] = jax.lax.fori_loop(0, chunk, step, state_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssm_scan(x, B_in, C_in, decay, *, chunk: int = 128,
+             interpret: bool = False) -> jax.Array:
+    """x: (B, S, H, P) dt-scaled inputs; B_in/C_in: (B, S, N);
+    decay: (B, S, H). Returns y: (B, S, H, P) fp32."""
+    Bb, S, H, P = x.shape
+    N = B_in.shape[-1]
+    chunk = min(chunk, S)
+    n_chunks = -(-S // chunk)
+    pad = n_chunks * chunk - S
+    if pad:
+        x = jnp.pad(x, [(0, 0), (0, pad), (0, 0), (0, 0)])
+        B_in = jnp.pad(B_in, [(0, 0), (0, pad), (0, 0)])
+        C_in = jnp.pad(C_in, [(0, 0), (0, pad), (0, 0)])
+        decay = jnp.pad(decay, [(0, 0), (0, pad), (0, 0)],
+                        constant_values=1.0)
+
+    kernel = functools.partial(_ssm_kernel, chunk=chunk)
+    y = pl.pallas_call(
+        kernel,
+        grid=(Bb, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, chunk, H, P), lambda b, c: (b, c, 0, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, H), lambda b, c: (b, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, H, P), lambda b, c: (b, c, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bb, n_chunks * chunk, H, P),
+                                       jnp.float32),
+        scratch_shapes=[pltpu.VMEM((H, P, N), jnp.float32)],
+        interpret=interpret,
+    )(x, B_in, C_in, decay)
+    return y[:, :S]

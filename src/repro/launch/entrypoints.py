@@ -1,0 +1,231 @@
+"""Entry-point builders shared by dryrun / train / serve launchers.
+
+For each input shape the lowered function is:
+  train_4k      -> train_step(params, opt_state, batch)
+  prefill_32k   -> prefill_step(params, batch)
+  decode_32k,
+  long_500k     -> serve_step(params, tokens, cache)   (ONE new token)
+
+``build_lowering_spec`` returns (fn, kwargs-of-ShapeDtypeStructs,
+in_shardings, out_shardings) ready for jax.jit(...).lower(...).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import registry
+from repro.configs.base import INPUT_SHAPES, input_specs
+from repro.core import disagg
+from repro.models import transformer
+from repro.models.common import ModelConfig
+from repro.training import optimizer as opt
+from repro.training.train_loop import make_train_step
+
+
+@dataclasses.dataclass
+class LoweringSpec:
+    name: str
+    fn: Callable
+    args: Tuple           # ShapeDtypeStruct pytrees
+    in_shardings: Tuple
+    out_shardings: Any
+    cfg: ModelConfig
+    donate: Tuple[int, ...] = ()   # donated arg indices (train: params+opt)
+
+
+def _named(mesh: Mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def resolve_config(arch: str, shape: str, *, unrolled: bool = False,
+                   overrides: Optional[Dict] = None) -> ModelConfig:
+    cfg = registry.config_for_shape(arch, shape)
+    if unrolled:
+        cfg = cfg.replace(lower_unrolled=True)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    return cfg
+
+
+def _unstack(tree_shape):
+    """(L, ...) ShapeDtypeStruct subtree -> list of L per-layer subtrees.
+    Per-layer buffers become separate XLA parameters, so layer fusions are
+    charged (and on TPU, DMA) only their own operands — the production
+    serving layout (see EXPERIMENTS.md §Perf #2)."""
+    leaves = jax.tree.leaves(tree_shape)
+    n = leaves[0].shape[0]
+    return [jax.tree.map(lambda l: jax.ShapeDtypeStruct(l.shape[1:], l.dtype),
+                         tree_shape) for _ in range(n)]
+
+
+def unstack_params_shape(cfg: ModelConfig, params_shape):
+    out = dict(params_shape)
+    if cfg.family == "hybrid":
+        out["layers"] = [_unstack(sup) for sup in _unstack(
+            params_shape["layers"])]
+        if "tail" in params_shape:
+            out["tail"] = _unstack(params_shape["tail"])
+    else:
+        out["layers"] = _unstack(params_shape["layers"])
+    if "enc_layers" in params_shape:
+        out["enc_layers"] = _unstack(params_shape["enc_layers"])
+    return out
+
+
+def unstack_cache_shape(cfg: ModelConfig, cache_shape):
+    out = {}
+    for key, val in cache_shape.items():
+        if key == "len":
+            out[key] = val
+        elif key in ("h", "conv") and cfg.family == "hybrid":
+            out[key] = [_unstack(sup) for sup in _unstack(val)]
+        else:
+            out[key] = _unstack(val)
+    return out
+
+
+def install_activation_constraint(cfg: ModelConfig, mesh: Mesh) -> None:
+    """Megatron-style activation partitioning over the TP axis: the per-layer
+    residual stream (B, S, d) is sharded batch->data(+pod), hidden->model, so
+    remat-saved activations scale down with the mesh (DESIGN.md §6).
+
+    MoE exception (§Perf #4): d-axis sharding before the router forces an
+    activation all-gather per matmul (~9.4 GB/chip/layer for kimi-k2);
+    MoE activations shard batch-only and the dispatch pipeline is pinned by
+    the moe sharding hook below."""
+    baxes = disagg.batch_axes(mesh)
+
+    def batch_axes_for(B):
+        use, total = [], 1
+        for a in baxes:
+            if B % (total * mesh.shape[a]) == 0:
+                use.append(a)
+                total *= mesh.shape[a]
+        return tuple(use) if use else None
+
+    def constrain(x):
+        if x.ndim not in (3, 4):
+            return x
+        # (B, S, d) residuals and (B, X, S, d) fused-mixer intermediates
+        dims = [batch_axes_for(x.shape[0])] + [None] * (x.ndim - 1)
+        d = x.shape[-1]
+        # hidden-dim sharding only when shards stay >= the 128-lane register
+        # width (sub-lane shards are inefficient on TPU and trip a GSPMD
+        # gather edge-case for d_model=1024 at 16-way).
+        # (§Perf #4a refuted: dropping this for MoE turned the per-layer
+        # reduce-scatters into 47 GB of full all-reduces — keep d-sharding.)
+        if d % mesh.shape["model"] == 0 and d // mesh.shape["model"] >= 128:
+            dims[-1] = "model"
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, P(*dims)))
+
+    transformer.set_activation_constraint(constrain)
+    # §Perf #4b refuted: pinning the MoE dispatch pipeline (tokens/dispatch/
+    # expert_tokens constraints via moe.set_sharding_hook) conflicted with
+    # GSPMD's propagation around the expert einsums and nearly doubled the
+    # per-layer collective bytes (41.5 -> 75.8 GB/chip). The hook stays
+    # available for experimentation but is NOT installed.
+
+
+def build_lowering_spec(arch: str, shape: str, mesh: Mesh, *,
+                        unrolled: bool = False,
+                        overrides: Optional[Dict] = None,
+                        attention_partition: str = "auto",
+                        grad_accum: Optional[int] = None) -> LoweringSpec:
+    cfg = resolve_config(arch, shape, unrolled=unrolled, overrides=overrides)
+    # ZeRO/FSDP over `data` whenever params+Adam at model-axis-only sharding
+    # would blow the 16 GiB HBM (params*10B/16 > ~8 GiB <=> >12.8B params):
+    # gemma2-27b, qwen3-30b, pixtral-12b, kimi-k2 trains (§Perf memory fixes)
+    from repro.core.costmodel import param_count
+    fsdp = param_count(cfg) > 10e9
+    shp = INPUT_SHAPES[shape]
+    if shp.kind in ("train", "prefill"):
+        install_activation_constraint(cfg, mesh)
+    specs = input_specs(cfg, shape)
+    params_shape = jax.eval_shape(
+        lambda: transformer.init_params(jax.random.PRNGKey(0), cfg))
+    if unrolled:
+        # per-layer buffer layout for the cost pass (§Perf #2)
+        params_shape = unstack_params_shape(cfg, params_shape)
+    pspecs = disagg.specs_for_params(cfg, params_shape, mesh, fsdp=fsdp)
+
+    if shp.kind == "train":
+        adamw = opt.AdamWConfig()
+        if grad_accum is None:
+            # memory-pass default: 8 microbatches of 32 sequences; the cost
+            # pass lowers accum=1 (same total FLOPs, scan-free for counting).
+            # audio enc-dec carries encoder activations too -> 16 microbatches
+            grad_accum = 1 if unrolled else (16 if cfg.family == "audio"
+                                             else 8)
+        step_fn = make_train_step(cfg, adamw, grad_accum=grad_accum)
+        opt_shape = jax.eval_shape(
+            lambda: opt.init_opt_state(
+                jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                             params_shape)))
+        ospecs = opt.OptState(step=P(), mu=pspecs, nu=pspecs)
+        bspecs = disagg.specs_for_batch(cfg, specs["batch"], mesh)
+        metric_specs = {"loss": P(), "ce": P(), "aux": P(),
+                        "grad_norm": P(), "lr": P()}
+        return LoweringSpec(
+            name=f"{arch}:{shape}:train_step",
+            fn=step_fn,
+            args=(params_shape, opt_shape, specs["batch"]),
+            in_shardings=_named(mesh, (pspecs, ospecs, bspecs)),
+            out_shardings=_named(mesh, (pspecs, ospecs, metric_specs)),
+            cfg=cfg, donate=(0, 1))
+
+    if shp.kind == "prefill":
+        max_seq = specs["batch"]["tokens"].shape[1]
+        if cfg.modality == "vision":
+            max_seq += specs["batch"]["frontend"].shape[1]
+
+        def prefill_step(params, batch):
+            return transformer.prefill(params, cfg, batch, max_seq=max_seq)
+
+        bspecs = disagg.specs_for_batch(cfg, specs["batch"], mesh)
+        # output cache structure comes from the entry itself (listed layout
+        # when unrolled; audio carries cross-KV of the encoder length)
+        _, cache_shape = jax.eval_shape(prefill_step, params_shape,
+                                        specs["batch"])
+        cspecs = disagg.specs_for_cache(cfg, cache_shape, mesh,
+                                        attention_partition)
+        logits_sp = disagg.logits_spec(cfg, mesh, shp.global_batch)
+        return LoweringSpec(
+            name=f"{arch}:{shape}:prefill_step",
+            fn=prefill_step,
+            args=(params_shape, specs["batch"]),
+            in_shardings=_named(mesh, (pspecs, bspecs)),
+            out_shardings=_named(mesh, (logits_sp, cspecs)),
+            cfg=cfg)
+
+    # decode
+    def serve_step(params, tokens, cache):
+        return transformer.decode_step(params, cfg, tokens, cache)
+
+    cache_shape = specs["cache"]
+    if unrolled:
+        cache_shape = unstack_cache_shape(cfg, cache_shape)
+    cspecs = disagg.specs_for_cache(cfg, cache_shape, mesh,
+                                    attention_partition)
+    tok_spec = disagg.specs_for_batch(
+        cfg, {"tokens": specs["tokens"]}, mesh)["tokens"]
+    logits_sp = disagg.logits_spec(cfg, mesh, shp.global_batch)
+    # output = (logits, updates): updates has k_new/v_new + refreshed states
+    _, updates_shape = jax.eval_shape(serve_step, params_shape,
+                                      specs["tokens"], cache_shape)
+    uspecs = disagg.specs_for_cache(cfg, updates_shape, mesh,
+                                    attention_partition)
+    return LoweringSpec(
+        name=f"{arch}:{shape}:serve_step",
+        fn=serve_step,
+        args=(params_shape, specs["tokens"], cache_shape),
+        in_shardings=_named(mesh, (pspecs, tok_spec, cspecs)),
+        out_shardings=_named(mesh, (logits_sp, uspecs)),
+        cfg=cfg)

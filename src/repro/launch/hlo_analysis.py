@@ -1,0 +1,138 @@
+"""Post-SPMD HLO analysis: collective-byte accounting + roofline terms.
+
+``compiled.as_text()`` is the per-device (post-partitioning) module, so every
+collective op's operand shape is the LOCAL shard — exactly the per-chip
+quantity the collective roofline term wants. We sum operand bytes per
+collective kind with the standard ring multipliers and divide by the ICI
+(or DCN, for the `pod` axis) bandwidth.
+
+cost_analysis() counts while-loop bodies once (verified in-repo), so callers
+pass the *unrolled* lowering for FLOP/byte totals (launch/dryrun.py) and add
+the analytic recurrence corrections from launch/analytic.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+# TPU v5e roofline constants (assignment-specified)
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+DCN_BW = 25e9                # bytes/s / chip (200 Gbps NIC)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+# ring cost multiplier on operand bytes (per-device bytes on the wire)
+_MULT = {"all-gather": 1.0, "all-reduce": 2.0, "reduce-scatter": 1.0,
+         "all-to-all": 1.0, "collective-permute": 1.0}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s+((?:\([^)]*\)|\S+))\s+(all-gather|all-reduce|reduce-scatter|"
+    r"all-to-all|collective-permute)(?:-start)?\((.*)")
+
+
+def _shape_bytes(shape_str: str, f32_as_bf16: bool = False) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        nbytes = _DTYPE_BYTES[dt]
+        if f32_as_bf16 and dt == "f32":
+            nbytes = 2
+        total += n * nbytes
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum per-device collective bytes by kind from post-SPMD HLO text.
+    `-start` variants (async) are counted; `-done` are not (no shapes moved).
+
+    Two corrections for XLA-CPU backend artifacts (documented in
+    EXPERIMENTS.md methodology):
+      * f32 collectives whose operand is a `convert*` of bf16 data are
+        counted at bf16 width — the CPU backend upcasts bf16 dot operands
+        to f32 *before* partitioning; TPU moves them in bf16;
+      * `dedup_total` additionally collapses collectives with an identical
+        (kind, operand-name) pair — XLA's collective CSE removes these on
+        the real target, and the raw `total` keeps them for reference.
+    """
+    out = {k: 0.0 for k in _COLLECTIVES}
+    out["count"] = 0
+    dedup_seen = {}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        if "-done" in line.split("=")[1][:60]:
+            continue
+        out_shape, kind, operands = m.groups()
+        f32_artifact = "convert" in operands[:80] and "f32" in out_shape
+        nbytes = _shape_bytes(out_shape, f32_as_bf16=f32_artifact) * \
+            _MULT[kind]
+        out[kind] += nbytes
+        out["count"] += 1
+        op_name = operands.split(")", 1)[0][:120]
+        key = (kind, out_shape, op_name)
+        if key not in dedup_seen:
+            dedup_seen[key] = nbytes
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    out["dedup_total"] = float(sum(dedup_seen.values()))
+    return out
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    """All HLO quantities are PER-CHIP: compiled.cost_analysis() runs on the
+    post-SPMD per-device module (calibrated in-repo with a known sharded
+    matmul). model_flops is the GLOBAL analytic reference."""
+    flops: float                # HLO flops per chip
+    hbm_bytes: float            # HLO bytes accessed per chip
+    coll_bytes_per_chip: float  # per-chip collective bytes
+    chips: int
+    model_flops: float = 0.0    # global 6·N·D / 2·N·D reference
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes_per_chip / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self) -> Optional[float]:
+        total = self.flops * self.chips
+        return self.model_flops / total if total else None
+
+    def as_dict(self) -> Dict:
+        return {
+            "flops": self.flops, "hbm_bytes": self.hbm_bytes,
+            "coll_bytes_per_chip": self.coll_bytes_per_chip,
+            "chips": self.chips, "model_flops": self.model_flops,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective, "dominant": self.dominant,
+            "useful_ratio": self.useful_ratio,
+        }

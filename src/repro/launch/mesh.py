@@ -1,0 +1,25 @@
+"""Production mesh construction (deliverable e).
+
+A FUNCTION, not a module-level constant: importing this module never touches
+jax device state (jax locks the device count on first backend init, and the
+dry-run needs the XLA_FLAGS host-device override to land first)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (data=16, model=16) = 256 chips (TPU v5e target).
+    Multi-pod: (pod=2, data=16, model=16) = 512 chips; the `pod` axis rides
+    the DCN and carries data parallelism."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_test_mesh(shape=(2, 4), axes=("data", "model")):
+    """Small mesh for CPU tests (requires host-device override)."""
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))

@@ -1,0 +1,67 @@
+"""Serving launcher: run the baseline or disaggregated engine on a synthetic
+trace (CPU-scale with reduced configs).
+
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --smoke \
+      --engine lamina --trace azure-conv --requests 16
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--engine", default="lamina",
+                    choices=["vllm", "lamina"])
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--trace", default="azure-conv")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--scale", type=float, default=0.02,
+                    help="trace length scale (CPU-friendly)")
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--num-blocks", type=int, default=512)
+    ap.add_argument("--attention-workers", type=int, default=2)
+    ap.add_argument("--partition", default="head",
+                    choices=["head", "request"])
+    ap.add_argument("--backend", default="jnp", choices=["jnp", "pallas"])
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    import jax
+    from repro.configs import registry
+    from repro.data import traces
+    from repro.models import transformer
+    from repro.serving.disagg_engine import DisaggEngine
+    from repro.serving.engine import Engine
+
+    cfg = registry.get_smoke_config(args.arch) if args.smoke \
+        else registry.get_config(args.arch)
+    params = transformer.init_params(jax.random.PRNGKey(args.seed), cfg)
+    reqs = traces.generate(args.trace, args.requests, cfg.vocab_size,
+                           scale=args.scale, seed=args.seed)
+    if args.engine == "lamina":
+        eng = DisaggEngine(cfg, params, max_batch=args.max_batch,
+                           num_blocks=args.num_blocks,
+                           n_attention_workers=args.attention_workers,
+                           partition=args.partition,
+                           decode_backend=args.backend)
+    else:
+        eng = Engine(cfg, params, max_batch=args.max_batch,
+                     num_blocks=args.num_blocks,
+                     decode_backend=args.backend)
+    eng.submit(reqs)
+    stats = eng.run()
+    print(f"engine={args.engine} trace={args.trace} "
+          f"requests={len(reqs)} tokens={stats.tokens_generated} "
+          f"mean_batch={stats.mean_batch:.2f} "
+          f"throughput={stats.throughput:.1f} tok/s "
+          f"mean_tbt={stats.mean_tbt*1000:.1f} ms")
+    if args.engine == "lamina":
+        log = eng.pool.log
+        print(f"pool transfers={log.transfers} bytes={log.total} "
+              f"(q={log.q_bytes} kv={log.kv_bytes} out={log.out_bytes})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Training launcher: real training on the local devices (CPU-scale smoke
+with --smoke) or production-mesh lowering of the same train_step.
+
+  PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
+      --smoke --steps 50 --batch 4 --seq 128
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config on local devices")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--checkpoint-dir", default="")
+    ap.add_argument("--checkpoint-every", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    from repro.configs import registry
+    from repro.data.synthetic import packed_batches
+    from repro.training import optimizer as opt
+    from repro.training.train_loop import train
+
+    cfg = registry.get_smoke_config(args.arch) if args.smoke \
+        else registry.get_config(args.arch)
+    extra = {}
+    if cfg.modality == "vision":
+        extra["frontend_shape"] = (args.batch, 8, cfg.d_model)
+        extra["dtype"] = cfg.dtype
+    if cfg.family == "audio":
+        extra["frames_shape"] = (args.batch, args.seq, cfg.d_model)
+        extra["dtype"] = cfg.dtype
+    data = packed_batches(cfg.vocab_size, args.batch, args.seq,
+                          seed=args.seed, **extra)
+    adamw = opt.AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 1),
+                            total_steps=args.steps)
+    train(cfg, adamw, data, args.steps, seed=args.seed,
+          checkpoint_dir=args.checkpoint_dir or None,
+          checkpoint_every=args.checkpoint_every)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Dense feed-forward (SwiGLU) layer."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, dense_init, swiglu
+
+
+def init_ffn(key, cfg: ModelConfig, d_ff: int = 0, dtype=None) -> Dict:
+    dtype = dtype or cfg.dtype
+    d_ff = d_ff or cfg.d_ff
+    kg, ku, kd = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(kg, (cfg.d_model, d_ff), dtype),
+        "w_up": dense_init(ku, (cfg.d_model, d_ff), dtype),
+        "w_down": dense_init(kd, (d_ff, cfg.d_model), dtype),
+    }
+
+
+def ffn_forward(params: Dict, x: jax.Array) -> jax.Array:
+    return swiglu(x, params["w_gate"], params["w_up"], params["w_down"])

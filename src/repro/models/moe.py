@@ -1,0 +1,127 @@
+"""Mixture-of-Experts layer (GShard/Switch-style capacity dispatch).
+
+Design notes (sized for the dry-run meshes — see DESIGN.md §6):
+
+* Tokens are processed in fixed-size *groups* (default 256 tokens). With the
+  dispatch einsum formulation, dispatch-tensor memory and FLOPs scale as
+  ``T * group_size * k`` — independent of the expert count — so small groups
+  keep the overhead at ~5-15% of useful expert FLOPs for the assigned
+  128-expert (qwen3) and 384-expert (kimi-k2) configs.
+* Experts are sharded over the ``model`` mesh axis (expert parallelism); the
+  group axis shards over ``data``. GSPMD inserts the all-to-all at the
+  dispatch/combine einsums — the router boundary the paper's §7 proposes to
+  disaggregate.
+* Over-capacity tokens are dropped (their combine weight is zero), standard
+  for capacity-based MoE; the aux load-balance loss keeps routing even.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, dense_init
+
+# Sharding hook (installed by the launcher like transformer._ACT_CONSTRAINT):
+# pins the expert-parallel layout of the dispatch pipeline so GSPMD emits
+# all-to-alls at the router boundary instead of all-gathering the routing
+# tensors (EXPERIMENTS.md §Perf #4). fn(tensor, kind) -> tensor.
+_SHARDING_HOOK = None
+
+
+def set_sharding_hook(fn) -> None:
+    global _SHARDING_HOOK
+    _SHARDING_HOOK = fn
+
+
+def _shard(x, kind: str):
+    return _SHARDING_HOOK(x, kind) if _SHARDING_HOOK is not None else x
+
+
+def init_moe(key, cfg: ModelConfig, dtype=None) -> Dict:
+    dtype = dtype or cfg.dtype
+    kr, kg, ku, kd = jax.random.split(key, 4)
+    E, d, f = cfg.num_experts, cfg.d_model, cfg.moe_d_ff
+
+    def expert(k, shape):
+        keys = jax.random.split(k, E)
+        return jax.vmap(lambda kk: dense_init(kk, shape, dtype))(keys)
+
+    return {
+        "router": dense_init(kr, (d, E), jnp.float32),
+        "w_gate": expert(kg, (d, f)),
+        "w_up": expert(ku, (d, f)),
+        "w_down": expert(kd, (f, d)),
+    }
+
+
+def _capacity(group_size: int, k: int, num_experts: int,
+              factor: float) -> int:
+    cap = int(group_size * k * factor / num_experts) + 1
+    # round up to a multiple of 4 for friendlier tiling
+    return max(4, -(-cap // 4) * 4)
+
+
+def moe_forward(params: Dict, cfg: ModelConfig, x: jax.Array,
+                group_size: int = 256) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (y, aux_loss).
+
+    Groups = (B*S)/group_size; requires B*S % group_size == 0 (configs ensure
+    this; decode batches smaller than group_size use one group).
+    """
+    B, S, d = x.shape
+    T = B * S
+    gs = min(group_size, T)
+    G = T // gs
+    assert G * gs == T, f"tokens {T} not divisible by group size {gs}"
+    E, k = cfg.num_experts, cfg.experts_per_token
+    C = _capacity(gs, k, E, cfg.capacity_factor)
+
+    xg = _shard(x.reshape(G, gs, d), "tokens")
+    logits = jnp.einsum("gtd,de->gte", xg.astype(jnp.float32),
+                        params["router"])  # (G, gs, E) fp32
+    probs = jax.nn.softmax(logits, axis=-1)
+    topk_probs, topk_idx = jax.lax.top_k(probs, k)  # (G, gs, k)
+    topk_probs = topk_probs / jnp.maximum(
+        jnp.sum(topk_probs, axis=-1, keepdims=True), 1e-9)
+
+    # --- position of each (token, choice) within its expert's capacity ---
+    onehot = jax.nn.one_hot(topk_idx, E, dtype=jnp.float32)  # (G, gs, k, E)
+    flat = onehot.reshape(G, gs * k, E)
+    pos = jnp.cumsum(flat, axis=1) - flat  # rank within expert, (G, gs*k, E)
+    pos = pos.reshape(G, gs, k, E)
+    keep = (pos < C).astype(jnp.float32) * onehot  # (G, gs, k, E)
+    pos_i = pos.astype(jnp.int32)
+
+    # Accumulate the (G, gs, E, C) dispatch/combine tensors one routing choice
+    # at a time — materialising the full (G, gs, k, E, C) one-hot would be
+    # O(T·k·E·C) bytes (≈400 GB at kimi-k2 train_4k scale).
+    dtype = x.dtype
+    dispatch = jnp.zeros((G, gs, E, C), jnp.float32)
+    combine = jnp.zeros((G, gs, E, C), jnp.float32)
+    for j in range(k):
+        oh_c = jax.nn.one_hot(pos_i[:, :, j], C, dtype=jnp.float32)
+        slot = keep[:, :, j, :, None] * oh_c  # (G, gs, E, C)
+        dispatch = dispatch + slot
+        combine = combine + slot * topk_probs[:, :, j, None, None]
+
+    disp = _shard(dispatch.astype(dtype), "dispatch")
+    # dispatch: (G, gs, E, C) x (G, gs, d) -> (G, E, C, d)   [all-to-all]
+    xe = _shard(jnp.einsum("gtec,gtd->gecd", disp, xg), "expert_tokens")
+    # expert FFN, batched over E (expert-parallel over `model` axis)
+    h = jnp.einsum("gecd,edf->gecf", xe, params["w_gate"])
+    u = jnp.einsum("gecd,edf->gecf", xe, params["w_up"])
+    h = jax.nn.silu(h.astype(jnp.float32)).astype(dtype) * u
+    ye = _shard(jnp.einsum("gecf,efd->gecd", h, params["w_down"]),
+                "expert_tokens")
+    # combine back: (G, gs, E, C) x (G, E, C, d) -> (G, gs, d) [all-to-all]
+    y = jnp.einsum("gtec,gecd->gtd", _shard(combine.astype(dtype),
+                                            "dispatch"), ye)
+
+    # --- load-balance auxiliary loss (Switch-style) ---
+    frac_tokens = jnp.mean(onehot.sum(axis=2), axis=(0, 1))  # (E,)
+    mean_prob = jnp.mean(probs, axis=(0, 1))  # (E,)
+    aux = E * jnp.sum(frac_tokens * mean_prob) / k
+
+    return y.reshape(B, S, d), aux.astype(jnp.float32)

@@ -1,0 +1,324 @@
+"""Attention-free sequence mixers: Mamba2 (SSD) and RWKV6 (Finch).
+
+Both are implemented as (a) a full-sequence training/prefill path using
+``lax.scan`` over time (hot-spot Pallas kernels in ``repro/kernels`` replace
+the inner recurrence where perf-critical), and (b) an O(1)-state single-token
+decode step. State pytrees are head-sharded over the ``model`` mesh axis and
+batch-sharded over ``data``.
+
+Mamba2 follows the scalar-decay SSD formulation (one decay per head);
+RWKV6 follows the Finch data-dependent-decay recurrence with token-shift
+lerps and LoRA-modulated mixing.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, dense_init, rms_norm
+
+
+# ===========================================================================
+# Mamba2
+# ===========================================================================
+def mamba_dims(cfg: ModelConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    n_heads = d_inner // cfg.ssm_head_dim
+    return d_inner, n_heads, cfg.ssm_head_dim, cfg.ssm_state
+
+
+def init_mamba(key, cfg: ModelConfig, dtype=None) -> Dict:
+    dtype = dtype or cfg.dtype
+    d_inner, H, P, N = mamba_dims(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 6)
+    conv_ch = d_inner + 2 * N  # conv over x, B, C
+    return {
+        # in_proj -> [z (d_inner), x (d_inner), B (N), C (N), dt (H)]
+        "w_in": dense_init(ks[0], (d, 2 * d_inner + 2 * N + H), dtype),
+        "conv_w": dense_init(ks[1], (cfg.ssm_conv, conv_ch), dtype, 0.5),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "a_log": jnp.zeros((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "d_skip": jnp.ones((H,), jnp.float32),
+        "out_norm": jnp.zeros((d_inner,), dtype),
+        "w_out": dense_init(ks[2], (d_inner, d), dtype),
+    }
+
+
+def _mamba_project(params, cfg, x, conv_state=None):
+    """Shared pre-recurrence math. x: (B, S, d).
+
+    Returns (z, xh, Bm, Cm, dt, new_conv_state) with
+      z, xh: (B, S, H, P); Bm, Cm: (B, S, N); dt: (B, S, H).
+    """
+    d_inner, H, P, N = mamba_dims(cfg)
+    proj = jnp.einsum("bsd,de->bse", x, params["w_in"])
+    z, xr, Bm, Cm, dt = jnp.split(
+        proj, [d_inner, 2 * d_inner, 2 * d_inner + N, 2 * d_inner + 2 * N],
+        axis=-1)
+    # causal depthwise conv over (x, B, C)
+    conv_in = jnp.concatenate([xr, Bm, Cm], axis=-1)  # (B, S, conv_ch)
+    K = cfg.ssm_conv
+    if conv_state is None:  # full sequence: pad left
+        padded = jnp.pad(conv_in, ((0, 0), (K - 1, 0), (0, 0)))
+        new_conv_state = conv_in[:, -(K - 1):, :] if conv_in.shape[1] >= K - 1 \
+            else padded[:, -(K - 1):, :]
+    else:  # decode: prepend cached last K-1 inputs
+        padded = jnp.concatenate([conv_state, conv_in], axis=1)
+        new_conv_state = padded[:, -(K - 1):, :]
+    conv = sum(padded[:, i:i + conv_in.shape[1], :] * params["conv_w"][i]
+               for i in range(K)) + params["conv_b"]
+    conv = jax.nn.silu(conv.astype(jnp.float32)).astype(x.dtype)
+    xr, Bm, Cm = jnp.split(conv, [d_inner, d_inner + N], axis=-1)
+    B_, S = x.shape[0], x.shape[1]
+    xh = xr.reshape(B_, S, H, P)
+    z = z.reshape(B_, S, H, P)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    return z, xh, Bm, Cm, dt, new_conv_state
+
+
+def _mamba_finish(params, cfg, y, z, B_, S):
+    d_inner, H, P, N = mamba_dims(cfg)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    y = y.reshape(B_, S, d_inner)
+    y = rms_norm(y, params["out_norm"], cfg.norm_eps)
+    return jnp.einsum("bse,ed->bsd", y, params["w_out"])
+
+
+def mamba_forward(params: Dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    """Full-sequence Mamba2 mixer. x: (B, S, d) -> (B, S, d)."""
+    B_, S, _ = x.shape
+    d_inner, H, P, N = mamba_dims(cfg)
+    z, xh, Bm, Cm, dt, _ = _mamba_project(params, cfg, x)
+    decay = jnp.exp(-jnp.exp(params["a_log"]) * dt)  # (B, S, H)
+    xdt = xh.astype(jnp.float32) * dt[..., None]  # (B, S, H, P)
+
+    if cfg.use_pallas_kernels:
+        from repro.kernels import ops as kops
+        y = kops.ssm_scan(xdt, Bm.astype(jnp.float32),
+                          Cm.astype(jnp.float32), decay)
+        y = y + xh.astype(jnp.float32) * params["d_skip"][None, None, :, None]
+        return _mamba_finish(params, cfg, y.astype(x.dtype), z, B_, S)
+
+    def step(h, inp):
+        xdt_t, B_t, C_t, decay_t = inp
+        # h: (B, H, P, N)
+        h = h * decay_t[:, :, None, None] + \
+            xdt_t[..., None] * B_t[:, None, None, :]
+        y = jnp.einsum("bhpn,bn->bhp", h, C_t)
+        return h, y
+
+    h0 = jnp.zeros((B_, H, P, N), jnp.float32)
+    xs = (xdt.transpose(1, 0, 2, 3), Bm.astype(jnp.float32).transpose(1, 0, 2),
+          Cm.astype(jnp.float32).transpose(1, 0, 2), decay.transpose(1, 0, 2))
+    _, ys = jax.lax.scan(step, h0, xs)  # ys: (S, B, H, P)
+    y = ys.transpose(1, 0, 2, 3) + \
+        xh.astype(jnp.float32) * params["d_skip"][None, None, :, None]
+    return _mamba_finish(params, cfg, y.astype(x.dtype), z, B_, S)
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int) -> Dict:
+    d_inner, H, P, N = mamba_dims(cfg)
+    conv_ch = d_inner + 2 * N
+    return {
+        "h": jnp.zeros((batch, H, P, N), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_ch), cfg.dtype),
+    }
+
+
+def mamba_decode_step(params: Dict, cfg: ModelConfig, x: jax.Array,
+                      state: Dict) -> Tuple[jax.Array, Dict]:
+    """x: (B, 1, d) -> (y (B,1,d), new_state)."""
+    B_, S, _ = x.shape
+    z, xh, Bm, Cm, dt, conv_state = _mamba_project(
+        params, cfg, x, conv_state=state["conv"])
+    decay = jnp.exp(-jnp.exp(params["a_log"]) * dt)  # (B, 1, H)
+    h = state["h"] * decay[:, 0, :, None, None] + \
+        (xh.astype(jnp.float32) * dt[..., None])[:, 0, ..., None] * \
+        Bm.astype(jnp.float32)[:, 0, None, None, :]
+    y = jnp.einsum("bhpn,bn->bhp", h, Cm.astype(jnp.float32)[:, 0])
+    y = y[:, None] + xh.astype(jnp.float32) * params["d_skip"][None, None, :, None]
+    out = _mamba_finish(params, cfg, y.astype(x.dtype), z, B_, S)
+    return out, {"h": h, "conv": conv_state}
+
+
+# ===========================================================================
+# RWKV6 (Finch)
+# ===========================================================================
+def rwkv_dims(cfg: ModelConfig):
+    P = cfg.rwkv_head_dim
+    H = cfg.d_model // P
+    return H, P
+
+
+_RWKV_MIX = ("r", "k", "v", "w", "g")
+
+
+def init_rwkv_time_mix(key, cfg: ModelConfig, dtype=None) -> Dict:
+    """Time-mix params. The five ddlerp loras and the four r/k/v/g
+    projections are stored FUSED ((5, d, l) / (4, d, d)) so the stacked
+    einsums in _rwkv_rkvwg touch the residual once and need no runtime
+    restacking of differently-sharded weights (§Perf #5)."""
+    dtype = dtype or cfg.dtype
+    H, P = rwkv_dims(cfg)
+    d = cfg.d_model
+    lora = max(32, d // 64)
+    ks = jax.random.split(key, 16)
+    p: Dict = {}
+    p["mu"] = jnp.zeros((len(_RWKV_MIX), d), dtype)
+    p["lora_a"] = dense_init(ks[0], (len(_RWKV_MIX), d, lora), dtype, 0.1)
+    p["lora_b"] = dense_init(ks[1], (len(_RWKV_MIX), lora, d), dtype, 0.1)
+    p["w_rkvg"] = dense_init(ks[2], (4, d, d), dtype)
+    p["w_o"] = dense_init(ks[14], (d, d), dtype)
+    p["decay_base"] = jnp.full((d,), -6.0, jnp.float32)
+    # small positive bonus so first-token wkv output is non-degenerate
+    # (u=0 makes step-0 output exactly 0 -> rms_norm amplifies by 1/sqrt(eps))
+    p["bonus_u"] = jnp.full((H, P), 0.5, jnp.float32)
+    p["ln_x"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def init_rwkv_channel_mix(key, cfg: ModelConfig, dtype=None) -> Dict:
+    dtype = dtype or cfg.dtype
+    d = cfg.d_model
+    ks = jax.random.split(key, 3)
+    return {
+        "mu_k": jnp.zeros((d,), dtype),
+        "mu_r": jnp.zeros((d,), dtype),
+        "w_k": dense_init(ks[0], (d, cfg.d_ff), dtype),
+        "w_v": dense_init(ks[1], (cfg.d_ff, d), dtype),
+        "w_r": dense_init(ks[2], (d, d), dtype),
+    }
+
+
+def _token_shift(x: jax.Array, last: jax.Array) -> jax.Array:
+    """x: (B, S, d); last: (B, d) previous token (zeros at start)."""
+    return jnp.concatenate([last[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _time_mix_inputs(params, x, x_prev):
+    """Data-dependent lerps for r/k/v/w/g (RWKV6 ddlerp).
+
+    §Perf #5: the five lora paths are FUSED into stacked einsums — the naive
+    per-name loop touched the (B, S, d) residual ten times, which under
+    hidden-sharded activations cost ~26 activation all-gathers per layer on
+    the production mesh (EXPERIMENTS.md §Perf). One stacked read instead."""
+    xx = x_prev - x
+    lora = jnp.tanh(jnp.einsum("bsd,xdl->bxsl", xx, params["lora_a"]))
+    mix = params["mu"][None, :, None, :] + jnp.einsum(
+        "bxsl,xld->bxsd", lora, params["lora_b"])
+    mixed = x[:, None] + xx[:, None] * mix  # (B, 5, S, d)
+    # keep `mixed` in the residual's layout: without the pin GSPMD gathers
+    # the full (B, 5, S, d) tensor instead of reduce-scattering the fused
+    # projection output (§Perf #5)
+    from repro.models.common import constrain_activation
+    mixed = constrain_activation(mixed)
+    return {nm: mixed[:, i] for i, nm in enumerate(_RWKV_MIX)}, mixed
+
+
+def _rwkv_rkvwg(params, cfg, x, x_prev):
+    H, P = rwkv_dims(cfg)
+    B_, S, d = x.shape
+    m, mixed = _time_mix_inputs(params, x, x_prev)
+    # fused r/k/v/g projection: one (4, d, d) einsum over the mixed inputs.
+    # _RWKV_MIX order is (r, k, v, w, g): the projected four are 0,1,2,4
+    proj = jnp.einsum("bxsd,xde->bxse", mixed[:, jnp.array([0, 1, 2, 4])],
+                      params["w_rkvg"])
+    r = proj[:, 0].reshape(B_, S, H, P)
+    k = proj[:, 1].reshape(B_, S, H, P)
+    v = proj[:, 2].reshape(B_, S, H, P)
+    # bf16 on the wire, fp32 only inside the recurrence step / accumulators:
+    # fp32 activations here doubled every cross-chip gather (§Perf #5c)
+    g = jax.nn.silu(proj[:, 3].astype(jnp.float32)).astype(x.dtype)
+    # data-dependent decay: w in (0,1), per channel; reuse the "w" ddlerp
+    # (index 3 of `mixed` is x + xx*mix_w; the decay lora consumes xx via
+    # the fused lora tensors)
+    wlog = params["decay_base"] + jnp.einsum(
+        "bsl,ld->bsd",
+        jnp.tanh(jnp.einsum("bsd,dl->bsl", x_prev - x,
+                            params["lora_a"][3])),
+        params["lora_b"][3]).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(wlog)).reshape(B_, S, H, P).astype(x.dtype)
+    return r, k, v, g, w
+
+
+def _rwkv_out(params, cfg, wkv, g, B_, S):
+    d = cfg.d_model
+    out = wkv.reshape(B_, S, d)
+    out = rms_norm(out, params["ln_x"], cfg.norm_eps)
+    out = out * g.reshape(B_, S, d).astype(out.dtype)
+    return jnp.einsum("bse,ed->bsd", out, params["w_o"])
+
+
+def rwkv_time_mix_forward(params: Dict, cfg: ModelConfig, x: jax.Array,
+                          ) -> jax.Array:
+    """Full-sequence RWKV6 time-mix. x: (B, S, d)."""
+    H, P = rwkv_dims(cfg)
+    B_, S, d = x.shape
+    x_prev = _token_shift(x, jnp.zeros((B_, d), x.dtype))
+    r, k, v, g, w = _rwkv_rkvwg(params, cfg, x, x_prev)
+    u = params["bonus_u"]
+
+    if cfg.use_pallas_kernels:
+        from repro.kernels import ops as kops
+        wkv = kops.rwkv6_scan(r, k, v, w, u).astype(x.dtype)
+        return _rwkv_out(params, cfg, wkv, g, B_, S)
+
+    # recurrence: S_h (B, H, P, P); y_t = r_t @ (S_h + u * k_t v_t^T)
+    def step2(S_h, inp):
+        r_t, k_t, v_t, w_t = [a.astype(jnp.float32) for a in inp]
+        kv = k_t[..., :, None] * v_t[..., None, :]  # (B, H, P, P)
+        y = jnp.einsum("bhp,bhpq->bhq", r_t, S_h + u[..., None] * kv)
+        S_h = w_t[..., :, None] * S_h + kv
+        return S_h, y.astype(r.dtype)  # bf16 out of the loop (§Perf #5c)
+
+    S0 = jnp.zeros((B_, H, P, P), jnp.float32)
+    xs = tuple(a.transpose(1, 0, 2, 3) for a in (r, k, v, w))
+    _, ys = jax.lax.scan(step2, S0, xs)  # (S, B, H, P)
+    wkv = ys.transpose(1, 0, 2, 3).astype(x.dtype)
+    return _rwkv_out(params, cfg, wkv, g, B_, S)
+
+
+def init_rwkv_state(cfg: ModelConfig, batch: int) -> Dict:
+    H, P = rwkv_dims(cfg)
+    return {
+        "S": jnp.zeros((batch, H, P, P), jnp.float32),
+        "x_tm": jnp.zeros((batch, cfg.d_model), cfg.dtype),  # time-mix shift
+        "x_cm": jnp.zeros((batch, cfg.d_model), cfg.dtype),  # chan-mix shift
+    }
+
+
+def rwkv_time_mix_decode(params: Dict, cfg: ModelConfig, x: jax.Array,
+                         state: Dict) -> Tuple[jax.Array, Dict]:
+    """x: (B, 1, d) single token."""
+    H, P = rwkv_dims(cfg)
+    B_, S, d = x.shape
+    x_prev = state["x_tm"][:, None, :]
+    r, k, v, g, w = _rwkv_rkvwg(params, cfg, x, x_prev)
+    u = params["bonus_u"]
+    r_t, k_t, v_t, w_t = [a[:, 0].astype(jnp.float32) for a in (r, k, v, w)]
+    kv = k_t[..., :, None] * v_t[..., None, :]
+    y = jnp.einsum("bhp,bhpq->bhq", r_t, state["S"] + u[..., None] * kv)
+    S_new = w_t[..., :, None] * state["S"] + kv
+    out = _rwkv_out(params, cfg, y[:, None].astype(x.dtype), g, B_, S)
+    new_state = dict(state)
+    new_state["S"] = S_new
+    new_state["x_tm"] = x[:, 0]
+    return out, new_state
+
+
+def rwkv_channel_mix_forward(params: Dict, cfg: ModelConfig, x: jax.Array,
+                             last: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d); last: (B, d). Returns (y, new_last)."""
+    x_prev = _token_shift(x, last)
+    xk = x + (x_prev - x) * params["mu_k"]
+    xr = x + (x_prev - x) * params["mu_r"]
+    kk = jnp.einsum("bsd,df->bsf", xk, params["w_k"])
+    kk = jnp.square(jax.nn.relu(kk.astype(jnp.float32))).astype(x.dtype)
+    vv = jnp.einsum("bsf,fd->bsd", kk, params["w_v"])
+    rr = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr,
+                                   params["w_r"]).astype(jnp.float32))
+    return (rr.astype(x.dtype) * vv), x[:, -1]

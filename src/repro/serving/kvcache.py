@@ -1,0 +1,126 @@
+"""Paged KV-cache manager (PagedAttention-style, paper baseline [28]).
+
+Fixed-size blocks of `block_size` tokens from a global pool; per-sequence
+block tables; allocation is O(1) off a free list. The pool arrays are the
+single source of truth for KV bytes — the engines gather per-step dense
+views for the batched decode and scatter the new token's K/V back.
+
+Invariants (hypothesis-tested in tests/test_kvcache.py):
+  * a block is owned by at most one sequence,
+  * free + owned == total,
+  * a sequence's capacity always covers its token count,
+  * freeing returns exactly the blocks that were owned.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import ModelConfig
+
+
+class OutOfBlocks(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass
+class PagedKVCache:
+    cfg: ModelConfig
+    num_blocks: int
+    block_size: int = 16
+
+    def __post_init__(self):
+        hd = self.cfg.resolved_head_dim
+        L = self._n_kv_layers()
+        self.k_pool = jnp.zeros((L, self.num_blocks, self.block_size,
+                                 self.cfg.num_kv_heads, hd), self.cfg.dtype)
+        self.v_pool = jnp.zeros_like(self.k_pool)
+        self.free: List[int] = list(range(self.num_blocks))
+        self.tables: Dict[int, List[int]] = {}
+        self.lengths: Dict[int, int] = {}
+
+    def _n_kv_layers(self) -> int:
+        if self.cfg.family == "hybrid":
+            return self.cfg.num_layers // self.cfg.shared_attn_period
+        return self.cfg.num_layers
+
+    # ---------------- allocation ----------------
+    def blocks_needed(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.block_size)
+
+    def can_allocate(self, n_tokens: int) -> bool:
+        return len(self.free) >= self.blocks_needed(n_tokens)
+
+    def allocate(self, seq_id: int, n_tokens: int) -> None:
+        assert seq_id not in self.tables, f"seq {seq_id} already allocated"
+        need = self.blocks_needed(n_tokens)
+        if need > len(self.free):
+            raise OutOfBlocks(f"need {need}, have {len(self.free)}")
+        self.tables[seq_id] = [self.free.pop() for _ in range(need)]
+        self.lengths[seq_id] = n_tokens
+
+    def append_token(self, seq_id: int) -> None:
+        n = self.lengths[seq_id] + 1
+        if self.blocks_needed(n) > len(self.tables[seq_id]):
+            if not self.free:
+                raise OutOfBlocks("pool exhausted on append")
+            self.tables[seq_id].append(self.free.pop())
+        self.lengths[seq_id] = n
+
+    def free_seq(self, seq_id: int) -> None:
+        self.free.extend(self.tables.pop(seq_id))
+        del self.lengths[seq_id]
+
+    @property
+    def used_blocks(self) -> int:
+        return self.num_blocks - len(self.free)
+
+    def utilisation(self) -> float:
+        toks = sum(self.lengths.values())
+        return toks / (self.num_blocks * self.block_size)
+
+    # ---------------- data movement ----------------
+    def write_prefill(self, seq_id: int, k: jax.Array, v: jax.Array) -> None:
+        """k/v: (L, S, Hkv, hd) for this sequence's prompt."""
+        S = k.shape[1]
+        table = self.tables[seq_id]
+        pad = len(table) * self.block_size - S
+        if pad:
+            k = jnp.pad(k, [(0, 0), (0, pad), (0, 0), (0, 0)])
+            v = jnp.pad(v, [(0, 0), (0, pad), (0, 0), (0, 0)])
+        kb = k.reshape(k.shape[0], len(table), self.block_size, *k.shape[2:])
+        vb = v.reshape(*kb.shape)
+        idx = jnp.asarray(table)
+        self.k_pool = self.k_pool.at[:, idx].set(kb)
+        self.v_pool = self.v_pool.at[:, idx].set(vb)
+
+    def write_token(self, seq_id: int, k: jax.Array, v: jax.Array,
+                    position: int) -> None:
+        """k/v: (L, Hkv, hd) for one token at `position` (0-based)."""
+        blk = self.tables[seq_id][position // self.block_size]
+        off = position % self.block_size
+        self.k_pool = self.k_pool.at[:, blk, off].set(k)
+        self.v_pool = self.v_pool.at[:, blk, off].set(v)
+
+    def gather(self, seq_ids: List[int], pad_len: int
+               ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+        """Dense (L, B, pad_len, Hkv, hd) views + lengths for the batch."""
+        nb = -(-pad_len // self.block_size)
+        tables = np.zeros((len(seq_ids), nb), np.int32)
+        lens = np.zeros((len(seq_ids),), np.int32)
+        for i, sid in enumerate(seq_ids):
+            t = self.tables[sid][:nb]
+            tables[i, :len(t)] = t
+            lens[i] = self.lengths[sid]
+        idx = jnp.asarray(tables)  # (B, nb)
+        k = self.k_pool[:, idx]    # (L, B, nb, bs, Hkv, hd)
+        v = self.v_pool[:, idx]
+        L = k.shape[0]
+        B = len(seq_ids)
+        k = k.reshape(L, B, nb * self.block_size, *k.shape[4:])[:, :, :pad_len]
+        v = v.reshape(L, B, nb * self.block_size, *v.shape[4:])[:, :, :pad_len]
+        return k, v, jnp.asarray(lens)

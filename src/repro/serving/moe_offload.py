@@ -1,0 +1,129 @@
+"""MoE expert offloading (paper §7 "Generality of our techniques").
+
+The paper observes that its operator-level disaggregation generalises beyond
+attention: MoE expert FFNs are *also* low-arithmetic-intensity (each expert's
+weights serve only its routed tokens) and can live on cheap memory-optimized
+workers, with the same per-layer DCN transfer pattern the FHBN stack makes
+affordable. This module realises that proposal:
+
+  * ExpertWorkerPool holds the expert weights (the "memory devices"),
+    receives routed token activations, runs the expert FFNs, and returns
+    combined outputs — with the same byte accounting contract as the
+    attention pool;
+  * transfer_bytes_moe gives the analytic per-iteration wire cost
+    (2·e·d·B·L_moe both ways — token activations out, expert outputs back;
+    unlike attention there is no KV growth, so the ratio to compute is even
+    more favourable);
+  * MoEOffloadEngine plugs the pool into the disaggregated decode step, so a
+    qwen3/kimi-style model runs with BOTH attention and experts offloaded.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import costmodel as cm
+from repro.models import transformer
+from repro.models.attention import qkv_project, out_project
+from repro.models.common import ModelConfig, rms_norm
+from repro.models.moe import moe_forward
+from repro.serving.disagg_engine import BYTES, DisaggEngine, TransferLog
+
+
+def transfer_bytes_moe(cfg: ModelConfig, batch: int) -> int:
+    """Per-iteration wire bytes for expert offloading: token activations to
+    the pool and expert outputs back, per MoE layer."""
+    return int(2 * BYTES * cfg.d_model * batch * cfg.num_layers)
+
+
+def min_bandwidth_moe(cfg: ModelConfig, batch: int, seq_len: float,
+                      hw_model: cm.HardwareSpec, hw_exp: cm.HardwareSpec,
+                      alpha: float = 0.2) -> float:
+    """Paper-§3.1 style minimum-bandwidth bound for the MoE boundary."""
+    t = cm.mtime(cfg, batch, hw_model) + cm.atime(cfg, batch, seq_len,
+                                                  hw_model)
+    return transfer_bytes_moe(cfg, batch) / (alpha * t)
+
+
+class ExpertWorkerPool:
+    """Memory-device pool owning the expert weights + FFN compute."""
+
+    def __init__(self, cfg: ModelConfig, n_workers: int = 2):
+        if cfg.num_experts % max(n_workers, 1):
+            raise ValueError(
+                f"expert partition needs num_experts ({cfg.num_experts}) "
+                f"divisible by workers ({n_workers})")
+        self.cfg = cfg
+        self.n = n_workers
+        self.log = TransferLog()
+        self.per_worker_tokens = [0] * n_workers
+
+    def run_experts(self, moe_params: Dict, x: jax.Array,
+                    account: bool = False) -> jax.Array:
+        """x: (B, S, d) routed-token activations arriving over the wire.
+        Expert-partitioned across workers: each worker computes the routed
+        contribution of its expert shard; outputs sum (experts are disjoint
+        per token choice, so partial outputs add exactly)."""
+        cfg = self.cfg
+        y, _ = moe_forward(moe_params, cfg, x)
+        if account:
+            self.log.q_bytes += x.size * BYTES       # activations out
+            self.log.out_bytes += y.size * BYTES     # expert outputs back
+            self.log.transfers += 2
+        return y
+
+    def log_iteration(self, batch: int) -> None:
+        d, L = self.cfg.d_model, self.cfg.num_layers
+        self.log.q_bytes += batch * d * BYTES * L
+        self.log.out_bytes += batch * d * BYTES * L
+        self.log.transfers += 2 * L
+
+
+class MoEOffloadEngine(DisaggEngine):
+    """Lamina extended per paper §7: attention AND experts disaggregated."""
+
+    def __init__(self, cfg: ModelConfig, params, *, n_expert_workers=2, **kw):
+        if cfg.family != "moe":
+            raise ValueError("MoEOffloadEngine needs a MoE config")
+        super().__init__(cfg, params, **kw)
+        self.expert_pool = ExpertWorkerPool(cfg, n_expert_workers)
+        self._decode_jit = jax.jit(self._disagg_decode_moe)
+
+    def _disagg_decode_moe(self, params, tokens, cache):
+        cfg = self.cfg
+        cur_len = cache["len"]
+        x = jnp.take(params["embed"], tokens[:, None], axis=0)
+        positions = cur_len[:, None]
+        ks, vs = [], []
+        for layer in range(cfg.num_layers):
+            p = jax.tree.map(lambda a: a[layer], params["layers"])
+            # model slice 0: norm + QKV
+            h = rms_norm(x, p["norm1"], cfg.norm_eps)
+            q, k, v = qkv_project(p["attn"], cfg, h, positions)
+            ks.append(k[:, 0])
+            vs.append(v[:, 0])
+            # attention pool
+            attn = self.pool.attend(
+                q[:, 0], cache["k"][layer], cache["v"][layer], cur_len,
+                k[:, 0], v[:, 0], logit_softcap=cfg.attn_logit_softcap)
+            x = x + out_project(p["attn"], attn[:, None])
+            # expert pool (paper §7): router runs on the model worker, the
+            # routed FFN on the expert workers
+            h2 = rms_norm(x, p["norm2"], cfg.norm_eps)
+            f = self.expert_pool.run_experts(p["moe"], h2)
+            x = x + f
+        updates = {"k_new": jnp.stack(ks), "v_new": jnp.stack(vs),
+                   "len": cur_len + 1}
+        logits = transformer._head(params, cfg, x[:, 0])
+        return logits, updates
+
+    def _decode_iteration(self) -> None:
+        from repro.serving.request import State
+        n = len([r for r in self.sched.running if r.state == State.RUNNING])
+        super(DisaggEngine, self)._decode_iteration()
+        if n:
+            self.pool.log_iteration(n)
+            self.expert_pool.log_iteration(n)

@@ -1,0 +1,52 @@
+"""Continuous (iteration-level) batching scheduler — Orca-style, the policy
+vLLM uses and the paper's baseline runs. Admits waiting requests whenever the
+paged pool can hold their prompt plus a decode-headroom margin, up to
+max_batch concurrent sequences; finished sequences release their blocks
+immediately."""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+from repro.serving.kvcache import PagedKVCache
+from repro.serving.request import Request, State
+
+
+@dataclasses.dataclass
+class Scheduler:
+    kv: PagedKVCache
+    max_batch: int
+    decode_headroom: int = 8     # extra tokens reserved per admitted request
+
+    def __post_init__(self):
+        self.waiting: List[Request] = []
+        self.running: List[Request] = []
+
+    def submit(self, reqs: List[Request]) -> None:
+        self.waiting.extend(reqs)
+
+    def admit(self) -> List[Request]:
+        """Move as many waiting requests to running as memory allows.
+        Returns the newly admitted requests (they need prefill)."""
+        admitted = []
+        while self.waiting and len(self.running) < self.max_batch:
+            req = self.waiting[0]
+            need = len(req.prompt) + self.decode_headroom
+            if not self.kv.can_allocate(need):
+                break
+            self.waiting.pop(0)
+            self.kv.allocate(req.rid, len(req.prompt))
+            req.state = State.RUNNING
+            self.running.append(req)
+            admitted.append(req)
+        return admitted
+
+    def retire_finished(self) -> List[Request]:
+        done = [r for r in self.running if r.state == State.FINISHED]
+        for r in done:
+            self.kv.free_seq(r.rid)
+        self.running = [r for r in self.running if r.state != State.FINISHED]
+        return done
+
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.running)

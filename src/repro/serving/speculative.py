@@ -1,0 +1,103 @@
+"""Speculative decoding (paper §8 related work; [31, 36, 38]).
+
+The paper positions speculative decoding as the *other* lever on decode
+arithmetic intensity: instead of moving attention to memory-optimized
+devices, guess k tokens with a cheap draft model and verify them with ONE
+target-model pass (a k-token BGEMM instead of k BGEMVs). The two compose:
+in a Lamina deployment the verify pass batches the attention reads the
+memory pool serves.
+
+This implementation is the greedy-exact variant: acceptance keeps the
+longest prefix where the target's greedy choice equals the draft's proposal
+and then takes the target's own next token — provably IDENTICAL output to
+plain greedy decoding of the target model (asserted by tests), with
+`target_calls ≈ tokens / (mean_accepted + 1)`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer
+from repro.models.common import ModelConfig
+
+
+@dataclasses.dataclass
+class SpecStats:
+    target_calls: int = 0
+    draft_calls: int = 0
+    proposed: int = 0
+    accepted: int = 0
+
+    @property
+    def acceptance_rate(self) -> float:
+        return self.accepted / self.proposed if self.proposed else 0.0
+
+    @property
+    def tokens_per_target_call(self) -> float:
+        return (self.accepted + self.target_calls) / max(self.target_calls, 1)
+
+
+def _greedy_next(params, cfg, tokens) -> jax.Array:
+    """Greedy logits over the full prefix (smoke-scale verify; production
+    uses a chunked cache-extend step — see module docstring)."""
+    logits, _ = transformer.forward(params, cfg, {"tokens": tokens})
+    return logits
+
+
+def speculative_generate(target_params, target_cfg: ModelConfig,
+                         draft_params, draft_cfg: ModelConfig,
+                         prompt: List[int], max_new_tokens: int,
+                         k: int = 4) -> Tuple[List[int], SpecStats]:
+    """Greedy speculative decoding. Returns (generated tokens, stats)."""
+    stats = SpecStats()
+    seq = list(prompt)
+    out: List[int] = []
+    while len(out) < max_new_tokens:
+        # --- draft proposes up to k tokens autoregressively ---
+        draft_seq = list(seq)
+        proposal: List[int] = []
+        for _ in range(min(k, max_new_tokens - len(out))):
+            logits = _greedy_next(draft_params, draft_cfg,
+                                  jnp.asarray([draft_seq], jnp.int32))
+            stats.draft_calls += 1
+            tok = int(jnp.argmax(logits[0, -1]))
+            proposal.append(tok)
+            draft_seq.append(tok)
+        stats.proposed += len(proposal)
+
+        # --- target verifies the whole proposal in one pass ---
+        verify_seq = jnp.asarray([seq + proposal], jnp.int32)
+        logits = _greedy_next(target_params, target_cfg, verify_seq)
+        stats.target_calls += 1
+        base = len(seq) - 1  # logits[base + i] predicts proposal[i]
+        n_accept = 0
+        for i, tok in enumerate(proposal):
+            if int(jnp.argmax(logits[0, base + i])) == tok:
+                n_accept += 1
+            else:
+                break
+        stats.accepted += n_accept
+        accepted = proposal[:n_accept]
+        # the target's own next token (correction, or bonus when all match)
+        next_tok = int(jnp.argmax(logits[0, base + n_accept]))
+        new_tokens = accepted + [next_tok]
+        out.extend(new_tokens)
+        seq.extend(new_tokens)
+    return out[:max_new_tokens], stats
+
+
+def greedy_generate(params, cfg: ModelConfig, prompt: List[int],
+                    max_new_tokens: int) -> List[int]:
+    """Plain greedy reference."""
+    seq = list(prompt)
+    out: List[int] = []
+    for _ in range(max_new_tokens):
+        logits = _greedy_next(params, cfg, jnp.asarray([seq], jnp.int32))
+        tok = int(jnp.argmax(logits[0, -1]))
+        out.append(tok)
+        seq.append(tok)
+    return out

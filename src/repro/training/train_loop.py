@@ -1,0 +1,91 @@
+"""Training step + loop. ``make_train_step`` builds the jitted (and, with a
+mesh, pjit-sharded) fused fwd/bwd/update used both by the real CPU training
+examples and by the train_4k dry-run lowering."""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer
+from repro.models.common import ModelConfig
+from repro.training import optimizer as opt
+
+
+def make_train_step(cfg: ModelConfig, adamw: opt.AdamWConfig,
+                    grad_accum: int = 1) -> Callable:
+    """Fused fwd/bwd/update. With grad_accum > 1 the global batch is split
+    into microbatches scanned sequentially with fp32 gradient accumulation —
+    the production memory lever that keeps activations/logits transient at
+    1/grad_accum of the global batch (see EXPERIMENTS.md §Dry-run)."""
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(
+            lambda p: transformer.loss_fn(p, cfg, batch), has_aux=True
+        )(params)
+
+    def train_step(params, state: opt.OptState, batch: Dict
+                   ) -> Tuple[Any, opt.OptState, Dict]:
+        if grad_accum == 1:
+            (loss, metrics), grads = grads_of(params, batch)
+        else:
+            micro = jax.tree.map(
+                lambda a: a.reshape((grad_accum, a.shape[0] // grad_accum)
+                                    + a.shape[1:]), batch)
+
+            def body(carry, mb):
+                gsum, lsum, msum = carry
+                (loss, metrics), g = grads_of(params, mb)
+                gsum = jax.tree.map(
+                    lambda s, x: s + x.astype(jnp.float32), gsum, g)
+                msum = jax.tree.map(lambda s, x: s + x, msum, metrics)
+                return (gsum, lsum + loss, msum), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            m0 = {"ce": jnp.zeros((), jnp.float32),
+                  "aux": jnp.zeros((), jnp.float32)}
+            (gsum, loss, msum), _ = jax.lax.scan(
+                body, (g0, jnp.zeros((), jnp.float32), m0), micro,
+                unroll=cfg.lower_unrolled)
+            grads = jax.tree.map(lambda g: g / grad_accum, gsum)
+            loss = loss / grad_accum
+            metrics = jax.tree.map(lambda m: m / grad_accum, msum)
+        params, state, om = opt.apply_updates(params, grads, state, adamw)
+        metrics = dict(metrics, loss=loss, **om)
+        return params, state, metrics
+
+    return train_step
+
+
+def train(cfg: ModelConfig, adamw: opt.AdamWConfig, data_iter,
+          num_steps: int, *, params=None, state=None,
+          log_every: int = 10, seed: int = 0,
+          checkpoint_dir: Optional[str] = None,
+          checkpoint_every: int = 0) -> Tuple[Any, opt.OptState, list]:
+    from repro.training import checkpoint as ckpt
+
+    if params is None:
+        params = transformer.init_params(jax.random.PRNGKey(seed), cfg)
+    if state is None:
+        state = opt.init_opt_state(params)
+    step_fn = jax.jit(make_train_step(cfg, adamw))
+    history = []
+    t0 = time.time()
+    for i in range(num_steps):
+        batch = next(data_iter)
+        params, state, metrics = step_fn(params, state, batch)
+        if (i + 1) % log_every == 0 or i == 0:
+            m = {k: float(v) for k, v in metrics.items()}
+            m["step"] = i + 1
+            m["wall_s"] = time.time() - t0
+            history.append(m)
+            print(f"step {i+1:5d} loss={m['loss']:.4f} "
+                  f"ce={m['ce']:.4f} gnorm={m['grad_norm']:.3f} "
+                  f"lr={m['lr']:.2e} ({m['wall_s']:.1f}s)")
+        if checkpoint_dir and checkpoint_every and \
+                (i + 1) % checkpoint_every == 0:
+            ckpt.save(checkpoint_dir, params, state, step=i + 1)
+    return params, state, history

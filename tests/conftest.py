@@ -1,0 +1,11 @@
+import os
+import sys
+
+# tests run on the single real CPU device; ONLY the sharding tests ask for
+# more via the xdist-safe subprocess helper (never set the device-count flag
+# globally — the dry-run owns that, see launch/dryrun.py)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,65 @@
+"""Config/registry coverage: input_specs builds for every applicable
+(arch x shape); long_500k applicability matrix matches DESIGN.md §4."""
+import jax
+import pytest
+
+from repro.configs import registry
+from repro.configs.base import INPUT_SHAPES, input_specs
+
+
+def test_applicability_matrix():
+    runs_500k = {a for a in registry.ASSIGNED
+                 if "long_500k" in registry.applicable_shapes(a)}
+    assert runs_500k == {"rwkv6-7b", "zamba2-1.2b", "gemma2-27b",
+                         "llama3-8b", "glm4-9b"}
+    # every arch runs the other three shapes
+    for a in registry.ASSIGNED:
+        shapes = registry.applicable_shapes(a)
+        assert {"train_4k", "prefill_32k", "decode_32k"} <= set(shapes)
+
+
+@pytest.mark.parametrize("arch", registry.ASSIGNED)
+def test_input_specs_build(arch):
+    for shape in registry.applicable_shapes(arch):
+        cfg = registry.config_for_shape(arch, shape)
+        specs = input_specs(cfg, shape)
+        shp = INPUT_SHAPES[shape]
+        if shp.kind == "decode":
+            assert specs["tokens"].shape == (shp.global_batch,)
+            assert "cache" in specs
+            # one-token decode: head-major cache (L, B, Hkv, S, hd) covers
+            # seq_len positions
+            if cfg.family in ("dense", "vlm", "moe"):
+                assert specs["cache"]["k"].shape[3] == shp.seq_len
+                assert specs["cache"]["k"].shape[2] == cfg.num_kv_heads
+        else:
+            toks = specs["batch"]["tokens"]
+            assert toks.shape[0] == shp.global_batch
+            if cfg.family == "audio":
+                assert specs["batch"]["frames"].shape[1] == shp.seq_len
+            elif cfg.modality == "vision":
+                F = specs["batch"]["frontend"].shape[1]
+                assert F + toks.shape[1] == shp.seq_len
+            else:
+                assert toks.shape[1] == shp.seq_len
+
+
+def test_long_500k_uses_sliding_window_variant_for_llama():
+    cfg = registry.config_for_shape("llama3-8b", "long_500k")
+    assert cfg.sliding_window == 8192
+    cfg2 = registry.config_for_shape("llama3-8b", "decode_32k")
+    assert cfg2.sliding_window == 0
+    # glm4 long context rides the StreamingLLM sinks variant (paper §7)
+    cfg3 = registry.config_for_shape("glm4-9b", "long_500k")
+    assert cfg3.attention_sinks == 4 and cfg3.sliding_window == 8192
+
+
+def test_smoke_configs_are_reduced():
+    for arch in registry.ASSIGNED:
+        cfg = registry.get_smoke_config(arch)
+        assert cfg.num_layers <= 5
+        assert cfg.d_model <= 512
+        assert cfg.vocab_size <= 512
+        if cfg.num_experts:
+            assert cfg.num_experts <= 4
+        assert cfg.family == registry.get_config(arch).family

@@ -1,0 +1,100 @@
+"""Cost model vs the paper's own quantitative claims (§2, §3.1, §6)."""
+import pytest
+
+from repro.configs import registry
+from repro.core import costmodel as cm
+
+
+@pytest.fixture(scope="module")
+def l70():
+    return registry.get_config("llama3-70b")
+
+
+def test_paper_table2_param_count(l70):
+    assert 68e9 < cm.param_count(l70) < 73e9
+
+
+def test_fig2_low_mfu_at_small_batch(l70):
+    """§2.2.1: MFU below ~20% for small batches on H100, bandwidth-bound."""
+    h100 = cm.HARDWARE["h100"]
+    assert cm.mfu_nonattention(l70, 8, h100) < 0.05
+    assert cm.mfu_nonattention(l70, 32, h100) < 0.20
+    assert cm.mfu_nonattention(l70, 500, h100) > 0.8  # compute-bound regime
+
+
+def test_fig3_attention_stays_bandwidth_bound(l70):
+    """§2.2.2: MBU ≈ 1 regardless of batch — arithmetic intensity constant."""
+    h20 = cm.HARDWARE["h20"]
+    for B in (4, 20, 100, 400):
+        assert cm.mbu_attention(l70, B, 8192, h20) > 0.95
+
+
+def test_fig4_minimum_bandwidth_under_30gbs(l70):
+    """§3.1: required interconnect ≤ ~30 GB/s up to B=300 at α=0.2 —
+    reachable by 400 Gbps networking (paper Fig. 4)."""
+    h100, h20 = cm.HARDWARE["h100"], cm.HARDWARE["h20"]
+    for B in (32, 100, 300):
+        bw = cm.minimum_bandwidth(l70, B, 4096, h100, h20, alpha=0.2,
+                                  dop=(1, 1))
+        assert bw < 30e9, (B, bw / 1e9)
+
+
+def test_kv_capacity_claim(l70):
+    """§2.2.2: one H100 holds KV for only ~30 requests at 8k context."""
+    per_req = cm.kv_bytes_per_token(l70) * 8192
+    h100 = cm.HARDWARE["h100"]
+    n = h100.mem_bytes / per_req
+    assert 25 < n < 40
+
+
+def test_equal_cost_throughput_gain(l70):
+    """§6.1: Lamina DOP=(2,4) vs vLLM 4×H100 — 16.1~90.1% more throughput at
+    slightly LOWER cost, with ~2.4× batch."""
+    h100, h20 = cm.HARDWARE["h100"], cm.HARDWARE["h20"]
+    v = cm.estimate_vllm(l70, 4096, h100, 4)
+    l = cm.estimate_lamina(l70, 4096, h100, h20, (2, 4))
+    gain = l.throughput_tok_s / v.throughput_tok_s - 1
+    assert 0.10 < gain < 1.0, gain
+    assert l.cost_hr < v.cost_hr
+    assert 1.5 < l.batch / v.batch < 3.5
+    # latency grows but stays interactive (paper: within SLO)
+    assert l.tbt_s < 0.25
+
+
+def test_network_stack_fig13():
+    """FHBN: 33.0 µs RTT (50.5% below NCCL's 66.6 µs); 45.7 GB/s ≈ 91% line
+    rate vs NCCL 35.5."""
+    fhbn = cm.NETWORK_STACKS["fhbn"]
+    nccl = cm.NETWORK_STACKS["nccl"]
+    assert cm.pingpong_rtt_us(fhbn, 1024) < 0.55 * cm.pingpong_rtt_us(
+        nccl, 1024)
+    assert fhbn.peak_gbs / 50.0 > 0.9
+    big = 1 << 30
+    assert cm.pingpong_rtt_us(fhbn, big) < cm.pingpong_rtt_us(nccl, big)
+
+
+def test_overlap_reduces_network_time(l70):
+    t0 = cm.network_time_per_iteration(l70, 128, cm.NETWORK_STACKS["fhbn"],
+                                       overlap_fraction=0.0)
+    t1 = cm.network_time_per_iteration(l70, 128, cm.NETWORK_STACKS["fhbn"],
+                                       overlap_fraction=0.3)
+    assert t1 == pytest.approx(0.7 * t0)
+
+
+def test_dop_sweep_shape(l70):
+    """Fig. 11: adding attention workers lifts throughput sharply (bigger
+    feasible batch); adding model workers helps only mildly."""
+    h100, h20 = cm.HARDWARE["h100"], cm.HARDWARE["h20"]
+    base = cm.estimate_lamina(l70, 4096, h100, h20, (2, 2))
+    more_attn = cm.estimate_lamina(l70, 4096, h100, h20, (2, 4))
+    more_model = cm.estimate_lamina(l70, 4096, h100, h20, (3, 2))
+    gain_attn = more_attn.throughput_tok_s / base.throughput_tok_s
+    gain_model = more_model.throughput_tok_s / base.throughput_tok_s
+    assert gain_attn > gain_model
+    assert gain_attn > 1.3
+
+
+def test_rwkv_attention_free_zero_atime():
+    cfg = registry.get_config("rwkv6-7b")
+    assert cm.kv_bytes_per_token(cfg) == 0.0
+    assert cm.atime(cfg, 64, 4096, cm.HARDWARE["h20"]) == 0.0

@@ -1,0 +1,152 @@
+"""Serving engines: baseline vs Lamina parity, continuous batching, transfer
+accounting vs the paper's §3.1 formula, head vs request load balance."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.data import traces
+from repro.models import transformer
+from repro.serving.disagg_engine import (AttentionWorkerPool, DisaggEngine,
+                                         expected_transfer_bytes)
+from repro.serving.engine import Engine
+from repro.serving.request import Request, SamplingParams
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = registry.get_smoke_config("llama3-8b")
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _reqs(cfg, lens=(5, 12, 9, 20), new=8):
+    rng = np.random.default_rng(0)
+    return [Request(prompt=rng.integers(0, cfg.vocab_size, size=n).tolist(),
+                    params=SamplingParams(max_new_tokens=new)) for n in lens]
+
+
+def test_engines_identical_outputs(setup):
+    cfg, params = setup
+    r1 = _reqs(cfg)
+    e1 = Engine(cfg, params, max_batch=4, num_blocks=64)
+    e1.submit(r1)
+    e1.run()
+    r2 = _reqs(cfg)
+    e2 = DisaggEngine(cfg, params, n_attention_workers=2, max_batch=4,
+                      num_blocks=64)
+    e2.submit(r2)
+    e2.run()
+    r3 = _reqs(cfg)
+    e3 = DisaggEngine(cfg, params, n_attention_workers=4,
+                      partition="request", max_batch=4, num_blocks=64)
+    e3.submit(r3)
+    e3.run()
+    for a, b, c in zip(r1, r2, r3):
+        assert a.output == b.output == c.output
+        assert len(a.output) == a.params.max_new_tokens
+
+
+def test_transfer_bytes_match_paper_formula(setup):
+    cfg, params = setup
+    reqs = _reqs(cfg)
+    eng = DisaggEngine(cfg, params, n_attention_workers=2, max_batch=4,
+                       num_blocks=64)
+    eng.submit(reqs)
+    eng.run()
+    per_token = eng.pool.log.total / eng.stats.tokens_generated
+    assert per_token == pytest.approx(expected_transfer_bytes(cfg, 1))
+    # and the formula itself is (2 + 2/G)·e·d·L for one token
+    G = cfg.gqa_group
+    assert expected_transfer_bytes(cfg, 1) == int(
+        (2 + 2 / G) * 2 * cfg.q_dim * cfg.num_layers)
+
+
+def test_continuous_batching_admits_as_memory_frees(setup):
+    cfg, params = setup
+    # pool sized so only ~3 requests fit at once
+    reqs = _reqs(cfg, lens=(20, 20, 20, 20, 20, 20), new=4)
+    eng = Engine(cfg, params, max_batch=8, num_blocks=12, block_size=8)
+    eng.submit(reqs)
+    eng.run()
+    assert all(r.done() for r in reqs)
+    assert max(eng.stats.batch_sizes) < 6  # memory-capped concurrency
+    assert eng.kv.used_blocks == 0         # everything freed
+
+
+def test_head_partition_balances_request_partition_does_not(setup):
+    cfg, params = setup
+    B, S, Hkv, hd = 4, 32, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = jax.random.normal(jax.random.PRNGKey(1),
+                          (B, cfg.num_heads, hd))
+    kc = jax.random.normal(jax.random.PRNGKey(2), (B, Hkv, S, hd))
+    vc = jax.random.normal(jax.random.PRNGKey(3), (B, Hkv, S, hd))
+    kn = jax.random.normal(jax.random.PRNGKey(4), (B, Hkv, hd))
+    vn = jax.random.normal(jax.random.PRNGKey(5), (B, Hkv, hd))
+    clen = jnp.array([32, 2, 2, 2], jnp.int32)  # imbalanced lengths
+    head = AttentionWorkerPool(cfg, 2, "head")
+    req = AttentionWorkerPool(cfg, 2, "request")
+    o1 = head.attend(q, kc, vc, clen, kn, vn)
+    o2 = req.attend(q, kc, vc, clen, kn, vn)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-4)
+    # head-level: equal bytes per worker; request-level also splits evenly
+    # in *allocated* bytes here, but the paper's point is VALID work — with
+    # per-request lengths [32,2,2,2], worker 0 holds 34 valid tokens of 36
+    assert head.per_worker_kv_bytes[0] == head.per_worker_kv_bytes[1]
+    valid = [int(clen[0] + clen[1]), int(clen[2] + clen[3])]
+    assert valid[0] / sum(valid) > 0.8  # request-level imbalance exists
+
+
+def test_head_partition_divisibility_guard(setup):
+    cfg, _ = setup
+    with pytest.raises(ValueError):
+        AttentionWorkerPool(cfg, 3, "head")  # 4 kv heads % 3 != 0
+
+
+def test_trace_generation_stats():
+    reqs = traces.generate("azure-conv", 200, vocab_size=100, scale=0.05,
+                           seed=1)
+    lens = np.array([len(r.prompt) for r in reqs])
+    gens = np.array([r.params.max_new_tokens for r in reqs])
+    spec = traces.TRACES["azure-conv"]
+    assert abs(lens.mean() - spec.mean_prompt * 0.05) / \
+        (spec.mean_prompt * 0.05) < 0.35
+    assert gens.mean() > 0
+    assert set(traces.TRACES) == {"azure-conv", "azure-code", "kimi-conv",
+                                  "kimi-ta"}
+
+
+def test_fault_tolerance_recovers_exactly(setup):
+    """Paper §5: attention-worker failure mid-decode -> KV rebuilt from
+    prompt + generated tokens; generation continues bit-identically."""
+    cfg, params = setup
+    ref = _reqs(cfg)
+    e_ref = DisaggEngine(cfg, params, max_batch=4, num_blocks=64)
+    e_ref.submit(ref)
+    e_ref.run()
+
+    reqs = _reqs(cfg)
+    eng = DisaggEngine(cfg, params, max_batch=4, num_blocks=64)
+    eng.submit(reqs)
+    for step in range(3):
+        eng.step()
+    eng.fail_attention_worker()   # lose ALL pooled KV
+    eng.fail_model_worker()       # and a model worker for good measure
+    eng.run()
+    for a, b in zip(ref, reqs):
+        assert a.output == b.output
+
+
+def test_overlap_engine_matches(setup):
+    cfg, params = setup
+    r1 = _reqs(cfg)
+    e1 = DisaggEngine(cfg, params, overlap=True, max_batch=4, num_blocks=64)
+    e1.submit(r1)
+    e1.run()
+    r2 = _reqs(cfg)
+    e2 = DisaggEngine(cfg, params, overlap=False, max_batch=4, num_blocks=64)
+    e2.submit(r2)
+    e2.run()
+    for a, b in zip(r1, r2):
+        assert a.output == b.output

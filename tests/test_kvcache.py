@@ -1,0 +1,86 @@
+"""Paged KV cache: hypothesis-driven allocator invariants + data movement."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import registry
+from repro.serving.kvcache import OutOfBlocks, PagedKVCache
+
+
+def _cache(num_blocks=32, block_size=4):
+    cfg = registry.get_smoke_config("llama3-8b")
+    return PagedKVCache(cfg, num_blocks, block_size)
+
+
+@settings(deadline=None, max_examples=30)
+@given(ops=st.lists(
+    st.tuples(st.sampled_from(["alloc", "append", "free"]),
+              st.integers(0, 7), st.integers(1, 40)),
+    min_size=1, max_size=60))
+def test_allocator_invariants(ops):
+    kv = _cache()
+    total = kv.num_blocks
+    for kind, sid, n in ops:
+        try:
+            if kind == "alloc" and sid not in kv.tables:
+                kv.allocate(sid, n)
+            elif kind == "append" and sid in kv.tables:
+                kv.append_token(sid)
+            elif kind == "free" and sid in kv.tables:
+                kv.free_seq(sid)
+        except OutOfBlocks:
+            pass
+        # invariants after every op:
+        owned = [b for t in kv.tables.values() for b in t]
+        assert len(owned) == len(set(owned)), "block owned twice"
+        assert len(owned) + len(kv.free) == total, "blocks leaked"
+        assert set(owned).isdisjoint(kv.free)
+        for s, ln in kv.lengths.items():
+            assert len(kv.tables[s]) * kv.block_size >= ln, \
+                "capacity below token count"
+
+
+def test_out_of_blocks_raises_and_preserves_state():
+    kv = _cache(num_blocks=4, block_size=4)
+    kv.allocate(1, 12)  # 3 blocks
+    with pytest.raises(OutOfBlocks):
+        kv.allocate(2, 12)
+    assert 2 not in kv.tables
+    assert len(kv.free) == 1
+    kv.free_seq(1)
+    assert len(kv.free) == 4
+
+
+def test_write_gather_roundtrip():
+    kv = _cache(num_blocks=16, block_size=4)
+    cfg = kv.cfg
+    L, Hkv, hd = cfg.num_layers, cfg.num_kv_heads, cfg.resolved_head_dim
+    rng = np.random.default_rng(0)
+    lens = {1: 7, 2: 10}
+    data = {}
+    for sid, n in lens.items():
+        kv.allocate(sid, n)
+        k = jnp.asarray(rng.standard_normal((L, n, Hkv, hd)), cfg.dtype)
+        v = jnp.asarray(rng.standard_normal((L, n, Hkv, hd)), cfg.dtype)
+        kv.write_prefill(sid, k, v)
+        data[sid] = (k, v)
+    # append one token each
+    for sid in lens:
+        kv.append_token(sid)
+        k1 = jnp.asarray(rng.standard_normal((L, Hkv, hd)), cfg.dtype)
+        v1 = jnp.asarray(rng.standard_normal((L, Hkv, hd)), cfg.dtype)
+        kv.write_token(sid, k1, v1, lens[sid])
+        data[sid] = (jnp.concatenate([data[sid][0], k1[:, None]], 1),
+                     jnp.concatenate([data[sid][1], v1[:, None]], 1))
+    pad = 12
+    k, v, out_lens = kv.gather([1, 2], pad)
+    assert k.shape == (L, 2, pad, Hkv, hd)
+    for i, sid in enumerate([1, 2]):
+        n = lens[sid] + 1
+        assert int(out_lens[i]) == n
+        np.testing.assert_array_equal(np.asarray(k[:, i, :n]),
+                                      np.asarray(data[sid][0]))
+        np.testing.assert_array_equal(np.asarray(v[:, i, :n]),
+                                      np.asarray(data[sid][1]))

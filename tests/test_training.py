@@ -1,0 +1,81 @@
+"""Training substrate: learning actually happens, checkpoint roundtrip,
+lr schedule, data pipeline packing."""
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry
+from repro.data.synthetic import SyntheticCorpus, packed_batches
+from repro.models import transformer
+from repro.training import checkpoint as ckpt
+from repro.training import optimizer as opt
+from repro.training.train_loop import train
+
+
+def test_loss_decreases():
+    cfg = registry.get_smoke_config("tinyllama-1.1b")
+    data = packed_batches(cfg.vocab_size, batch=4, seq_len=64, seed=0)
+    _, _, hist = train(
+        cfg, opt.AdamWConfig(lr=1e-3, warmup_steps=5, total_steps=60),
+        data, 60, log_every=10)
+    assert hist[-1]["loss"] < hist[0]["loss"] - 0.15
+
+
+def test_checkpoint_roundtrip():
+    cfg = registry.get_smoke_config("qwen3-moe-30b-a3b")
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    state = opt.init_opt_state(params)
+    with tempfile.TemporaryDirectory() as d:
+        ckpt.save(d, params, state, step=3)
+        ckpt.save(d, params, state, step=9)
+        assert ckpt.latest_step(d) == 9
+        tree, step = ckpt.restore(d, {"params": params, "opt": state})
+        assert step == 9
+        for a, b in zip(jax.tree.leaves(params),
+                        jax.tree.leaves(tree["params"])):
+            assert a.dtype == b.dtype
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_lr_schedule_warmup_and_cosine():
+    cfg = opt.AdamWConfig(lr=1.0, warmup_steps=10, total_steps=110,
+                          min_lr_ratio=0.1)
+    assert float(opt.lr_schedule(cfg, jnp.asarray(5))) < 0.6
+    assert float(opt.lr_schedule(cfg, jnp.asarray(10))) == 1.0
+    end = float(opt.lr_schedule(cfg, jnp.asarray(110)))
+    assert abs(end - 0.1) < 1e-5
+
+
+def test_grad_clip_bounds_update():
+    cfg = registry.get_smoke_config("tinyllama-1.1b")
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    state = opt.init_opt_state(params)
+    huge = jax.tree.map(lambda p: jnp.full(p.shape, 100.0, jnp.float32),
+                        params)
+    _, _, m = opt.apply_updates(params, huge, state,
+                                opt.AdamWConfig(grad_clip=1.0))
+    assert float(m["grad_norm"]) > 1.0  # reported pre-clip
+
+
+def test_synthetic_corpus_has_structure():
+    c = SyntheticCorpus(vocab_size=64, seed=0)
+    rng = np.random.default_rng(0)
+    doc = c.document(rng, 2000)
+    # successor entropy must be far below uniform (learnable structure)
+    pair_counts = {}
+    for a, b in zip(doc[:-1], doc[1:]):
+        pair_counts.setdefault(int(a), []).append(int(b))
+    uniq = np.mean([len(set(v)) for v in pair_counts.values()
+                    if len(v) >= 10])
+    assert uniq < 32  # far fewer than 64 distinct successors
+
+
+def test_packed_batches_shapes():
+    it = packed_batches(100, batch=3, seq_len=32, seed=0)
+    b = next(it)
+    assert b["tokens"].shape == (3, 32)
+    assert b["labels"].shape == (3, 32)
+    assert b["mask"].shape == (3, 32)
+    assert float(b["mask"][0, -1]) == 0.0
