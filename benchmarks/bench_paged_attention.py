@@ -1,0 +1,83 @@
+"""Paged vs dense-gather decode attention: wall time at CPU scale plus the
+analytic per-step KV bytes each path moves (the quantity that matters on
+TPU — the paper's §3 point is that decode attention is memory-bound, so the
+per-step traffic IS the speed).
+
+Dense-gather path (the old engine hot path): every iteration copies the
+paged pool into a dense padded slab (pool read + slab write), transposes it
+to head-major (read + write) and streams it through the kernel (read) —
+five passes over 2·L·B·pad·Hkv·hd·e bytes. Paged path: the kernel walks the
+block pool in place through the table — one read of the allocated live
+blocks plus one token write. The sweep reports both byte counts and the
+reduction factor (acceptance: ≥2×).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import time_call
+from repro.configs import registry
+from repro.models.attention import (decode_attention_partial_jnp,
+                                    paged_decode_attention_partial_jnp)
+from repro.serving.kvcache import PagedKVCache
+
+E = 2  # bf16/fp16 wire/storage bytes per element (paper Table 2 "e")
+
+
+def _dense_gather_step(kv, ids, pad, q):
+    k, v, lens = kv.gather(ids, pad)                  # pool -> dense slab
+    kh = jnp.swapaxes(k, 2, 3)                        # -> head-major
+    vh = jnp.swapaxes(v, 2, 3)
+    return decode_attention_partial_jnp(q, kh[0], vh[0], lens).a
+
+
+def _paged_step(kv, ids, q):
+    tables, lens = kv.block_table_batch(ids)
+    return paged_decode_attention_partial_jnp(
+        q, kv.k_pool[0], kv.v_pool[0], jnp.asarray(tables),
+        jnp.asarray(lens)).a
+
+
+def run():
+    rows = []
+    cfg = registry.get_smoke_config("llama3-8b")
+    Hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    H = cfg.num_heads
+    L = cfg.num_layers
+    rng = np.random.default_rng(0)
+    for B, S in [(2, 64), (4, 128), (8, 256)]:
+        bs = 16
+        kv = PagedKVCache(cfg, num_blocks=B * (S // bs) + 8, block_size=bs)
+        lens = [int(x) for x in
+                rng.integers(max(1, S // 4), S + 1, size=B)]
+        lens[0] = S  # the padded slab is sized by the longest sequence
+        for sid, n in enumerate(lens):
+            kv.allocate(sid, n)
+            kv.write_prefill(
+                sid,
+                jnp.asarray(rng.standard_normal((L, Hkv, n, hd)), cfg.dtype),
+                jnp.asarray(rng.standard_normal((L, Hkv, n, hd)), cfg.dtype))
+        ids = list(range(B))
+        q = jnp.asarray(rng.standard_normal((B, H, hd)), jnp.float32)
+        pad = -(-S // bs) * bs
+
+        t_dense = time_call(lambda: _dense_gather_step(kv, ids, pad, q))
+        t_paged = time_call(lambda: _paged_step(kv, ids, q))
+
+        # analytic per-step KV bytes, full L-layer step, k+v
+        slab = 2 * L * B * pad * Hkv * hd * E
+        dense_bytes = 5 * slab          # gather r+w, transpose r+w, kernel r
+        live = 2 * L * sum(-(-n // bs) * bs for n in lens) * Hkv * hd * E
+        token_w = 2 * L * B * Hkv * hd * E
+        paged_bytes = live + token_w    # kernel read of live blocks + write
+        ratio = dense_bytes / paged_bytes
+        rows.append({
+            "name": f"paged_attn_B{B}_S{S}",
+            "us_per_call": round(t_paged * 1e6, 1),
+            "derived": (f"dense_us={t_dense*1e6:.0f};"
+                        f"dense_step_kv_mib={dense_bytes/2**20:.2f};"
+                        f"paged_step_kv_mib={paged_bytes/2**20:.2f};"
+                        f"bytes_reduction={ratio:.1f}x")})
+    return rows

@@ -21,6 +21,7 @@ MODULES = [
     ("fig14_overlap_ablation", "benchmarks.bench_overlap"),
     ("sec43_pipelining", "benchmarks.bench_pipeline"),
     ("kernels_micro", "benchmarks.bench_kernels"),
+    ("paged_attention", "benchmarks.bench_paged_attention"),
     ("sec7_extensions", "benchmarks.bench_extensions"),
 ]
 

@@ -24,6 +24,11 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+try:  # jax >= 0.5 promotes shard_map out of experimental
+    _shard_map = jax.shard_map
+except AttributeError:  # pragma: no cover — older jax in the container
+    from jax.experimental.shard_map import shard_map as _shard_map
+
 from repro.core import combine as C
 
 
@@ -77,7 +82,7 @@ def seq_parallel_decode_attention(mesh: Mesh, axis: str, q, k_cache, v_cache,
         part = _masked_partial(q, kc, vc, valid, logit_softcap)
         return C.finalize(C.psum_combine(part, axis)).astype(q.dtype)
 
-    return jax.shard_map(
+    return _shard_map(
         shard_fn, mesh=mesh,
         in_specs=(P(batch_axis, None, None), P(batch_axis, axis, None, None),
                   P(batch_axis, axis, None, None), bspec),
@@ -112,12 +117,94 @@ def head_parallel_decode_attention(mesh: Mesh, axis: str, q, k_cache, v_cache,
         part = _masked_partial(q, kc, vc, valid, logit_softcap)
         return C.finalize(part).astype(q.dtype)
 
-    return jax.shard_map(
+    return _shard_map(
         shard_fn, mesh=mesh,
         in_specs=(P(batch_axis, axis, None), P(batch_axis, None, axis, None),
                   P(batch_axis, None, axis, None), bspec),
         out_specs=P(batch_axis, axis, None),
     )(q, k_cache, v_cache, cache_len)
+
+
+# ---------------------------------------------------------------------------
+# Paged variants: the pool-native backends. The KV operand is the serving
+# engines' block pool (Hkv, num_blocks, block_size, hd) + a (B, nb) block
+# table — what the paged flash-decode kernel consumes in place. Head-level
+# shards the pool's head axis (each device owns its heads' blocks wholesale);
+# request-level shards the table/batch and replicates the pool. Sharding by
+# blocks rather than dense slabs is the layout the cross-chip sequence
+# partition will split on (ROADMAP follow-on).
+# ---------------------------------------------------------------------------
+def _paged_dense_view(k_pool, v_pool, block_tables):
+    """(Hkv, NB, bs, hd) pools + (B, nb) table -> seq-major dense
+    (B, nb·bs, Hkv, hd) views for ``_masked_partial``."""
+    Hkv, _, bs, hd = k_pool.shape
+    B, nb = block_tables.shape
+    kc = jnp.transpose(k_pool[:, block_tables], (1, 2, 3, 0, 4)).reshape(
+        B, nb * bs, Hkv, hd)
+    vc = jnp.transpose(v_pool[:, block_tables], (1, 2, 3, 0, 4)).reshape(
+        B, nb * bs, Hkv, hd)
+    return kc, vc
+
+
+def head_parallel_paged_decode_attention(mesh: Mesh, axis: str, q, k_pool,
+                                         v_pool, block_tables, cache_len, *,
+                                         sliding_window: int = 0,
+                                         logit_softcap: float = 0.0,
+                                         batch_axis: Optional[str] = None):
+    """Head-level split over the paged pool: each device owns Hkv/n heads of
+    every pool block (pool head axis sharded over `axis`); the block table
+    and lengths are replicated scalars. No combine needed — heads are
+    independent. Requires Hkv % mesh.shape[axis] == 0 (paper §5)."""
+    Hkv = k_pool.shape[0]
+    n = mesh.shape[axis]
+    if Hkv % n:
+        raise ValueError(
+            f"head-level partitioning needs kv_heads ({Hkv}) divisible by "
+            f"pool size ({n}) — paper §5; use seq-level instead")
+    bspec = P(batch_axis) if batch_axis else P()
+    btspec = P(batch_axis, None) if batch_axis else P()
+
+    def shard_fn(q, kp, vp, bt, clen):
+        kc, vc = _paged_dense_view(kp, vp, bt)
+        S = kc.shape[1]
+        pos = jnp.arange(S)[None, :]
+        valid = pos < clen[:, None]
+        if sliding_window > 0:
+            valid &= pos >= (clen[:, None] - sliding_window)
+        part = _masked_partial(q, kc, vc, valid, logit_softcap)
+        return C.finalize(part).astype(q.dtype)
+
+    return _shard_map(
+        shard_fn, mesh=mesh,
+        in_specs=(P(batch_axis, axis, None), P(axis, None, None, None),
+                  P(axis, None, None, None), btspec, bspec),
+        out_specs=P(batch_axis, axis, None),
+    )(q, k_pool, v_pool, block_tables, cache_len)
+
+
+def request_parallel_paged_decode_attention(mesh: Mesh, axis: str, q, k_pool,
+                                            v_pool, block_tables, cache_len,
+                                            *, sliding_window: int = 0,
+                                            logit_softcap: float = 0.0):
+    """Request-level split over the paged pool: the batch (q, block table,
+    lengths) is sharded; the pool is replicated — each device walks only its
+    requests' tables (the paper's load-imbalance baseline, pool-native)."""
+    def shard_fn(q, kp, vp, bt, clen):
+        kc, vc = _paged_dense_view(kp, vp, bt)
+        S = kc.shape[1]
+        pos = jnp.arange(S)[None, :]
+        valid = pos < clen[:, None]
+        if sliding_window > 0:
+            valid &= pos >= (clen[:, None] - sliding_window)
+        return C.finalize(_masked_partial(q, kc, vc, valid,
+                                          logit_softcap)).astype(q.dtype)
+
+    return _shard_map(
+        shard_fn, mesh=mesh,
+        in_specs=(P(axis, None, None), P(None, None, None, None),
+                  P(None, None, None, None), P(axis, None), P(axis)),
+        out_specs=P(axis, None, None),
+    )(q, k_pool, v_pool, block_tables, cache_len)
 
 
 # ---------------------------------------------------------------------------
@@ -136,7 +223,7 @@ def request_parallel_decode_attention(mesh: Mesh, axis: str, q, k_cache,
         return C.finalize(_masked_partial(q, kc, vc, valid,
                                           logit_softcap)).astype(q.dtype)
 
-    return jax.shard_map(
+    return _shard_map(
         shard_fn, mesh=mesh,
         in_specs=(P(axis, None, None), P(axis, None, None, None),
                   P(axis, None, None, None), P(axis)),

@@ -45,19 +45,26 @@ def _decode_attn_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, lo_ref, mo_ref,
     v = v_ref[0, 0].astype(jnp.float32)
     cache_len = len_ref[0]
 
+    pos = kb * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (1, block_k), 1)[0]           # (block_k,)
+    row_valid = pos < cache_len
+    if sliding_window > 0:
+        in_window = pos >= (cache_len - sliding_window)
+        if attention_sinks > 0:  # StreamingLLM sinks stay attendable
+            in_window |= pos < attention_sinks
+        row_valid &= in_window
+    # S % block_k != 0: the trailing block reads past the cache (the wrapper
+    # no longer pads a full copy); zero v under the mask so the 0-weight
+    # columns can never contribute Inf/NaN through 0·garbage
+    v = jnp.where(row_valid[:, None], v, 0.0)
+
     hd = q.shape[-1]
     scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
     s = jax.lax.dot_general(q * scale, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32)  # (G, block_k)
     if logit_softcap > 0.0:
         s = logit_softcap * jnp.tanh(s / logit_softcap)
-    pos = kb * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-    valid = pos < cache_len
-    if sliding_window > 0:
-        in_window = pos >= (cache_len - sliding_window)
-        if attention_sinks > 0:  # StreamingLLM sinks stay attendable
-            in_window |= pos < attention_sinks
-        valid &= in_window
+    valid = jnp.broadcast_to(row_valid[None, :], s.shape)
     s = jnp.where(valid, s, NEG_INF)
 
     # paper §4.2.2 combine: rebase running (acc, l) onto the new max
@@ -98,12 +105,11 @@ def decode_attention(q, k_cache, v_cache, cache_len, *, block_k: int = 512,
     B, Hkv, G, hd = q.shape
     S = k_cache.shape[2]
     block_k = min(block_k, S)
+    # ragged tail (S % block_k != 0) is handled by the grid + in-kernel
+    # masking: the trailing BlockSpec tile reads past S (allowed — boundary
+    # tiles are logically padded) and the kernel zeroes v / NEG_INFs scores
+    # for positions ≥ cache_len, so no full-cache jnp.pad copy is needed
     nb = -(-S // block_k)
-    pad = nb * block_k - S
-    if pad:
-        cfgpad = [(0, 0), (0, 0), (0, pad), (0, 0)]
-        k_cache = jnp.pad(k_cache, cfgpad)
-        v_cache = jnp.pad(v_cache, cfgpad)
 
     kernel = functools.partial(
         _decode_attn_kernel, block_k=block_k, sliding_window=sliding_window,

@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import decode_attention as _da
+from repro.kernels import paged_decode_attention as _pda
 from repro.kernels import rwkv6_scan as _rw
 from repro.kernels import ssm_scan as _ssm
 
@@ -65,9 +66,35 @@ def _pallas_decode_partial_backend(q, k_cache, v_cache, cache_len, *,
                    s=l.reshape(B, H), m=m.reshape(B, H))
 
 
+def _pallas_paged_decode_partial_backend(q, k_pool, v_pool, block_tables,
+                                         cache_len, *,
+                                         sliding_window: int = 0,
+                                         attention_sinks: int = 0,
+                                         logit_softcap: float = 0.0):
+    """Paged partial triple over the block pool (same backend contract as
+    the dense variant: cache_len = stored tokens, window w.r.t. total length
+    cache_len+1) — the serving engines' TPU hot path."""
+    from repro.core.combine import Partial
+
+    B, H, hd = q.shape
+    Hkv = k_pool.shape[0]  # head-major pool (Hkv, num_blocks, bs, hd)
+    G = H // Hkv
+    qg = q.reshape(B, Hkv, G, hd)
+    sw = max(sliding_window - 1, 0) if sliding_window > 0 else 0
+    o, l, m = _pda.paged_decode_attention(
+        qg, k_pool, v_pool, block_tables, cache_len, sliding_window=sw,
+        attention_sinks=attention_sinks, logit_softcap=logit_softcap,
+        interpret=_INTERPRET, return_partials=True)
+    return Partial(a=o.astype(jnp.float32).reshape(B, H, hd) *
+                   l.reshape(B, H)[..., None],
+                   s=l.reshape(B, H), m=m.reshape(B, H))
+
+
 def register():
-    from repro.models.attention import register_decode_backend
+    from repro.models.attention import (register_decode_backend,
+                                        register_paged_decode_backend)
     register_decode_backend("pallas", _pallas_decode_partial_backend)
+    register_paged_decode_backend("pallas", _pallas_paged_decode_partial_backend)
 
 
 register()

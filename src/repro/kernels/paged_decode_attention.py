@@ -1,0 +1,190 @@
+"""Paged flash-decode GQA attention Pallas kernel.
+
+PagedAttention-style (the paper's baseline [28]) counterpart of
+``decode_attention.py``: instead of a dense per-batch KV slab, the kernel
+consumes the serving engine's block pool *in place* through a per-sequence
+block table, so a decode step moves exactly one read of the live KV plus one
+token write — no per-step dense gather, no pool-sized transposes (the
+`kill-the-gather` tentpole; the paper's whole premise is that decode
+attention is memory-bound, §3).
+
+Mechanics:
+  * the pool is HEAD-MAJOR ``(Hkv, num_blocks, block_size, hd)`` per layer,
+    so one (head, block) tile is a contiguous ``(block_size, hd)`` DMA;
+  * ``block_tables (B, nb)`` + ``cache_len (B,)`` ride in as scalar-prefetch
+    operands (``PrefetchScalarGridSpec``) and drive the k/v BlockSpec index
+    maps — the grid's KV dimension walks the table, streaming pool blocks
+    HBM→VMEM;
+  * per block the kernel computes the partial (acc, denom, max) triple and
+    merges it with the running state using the paper-§4.2.2 combine identity
+    (``core/combine.py``) — identical math to ``decode_attention.py``, so the
+    two backends are interchangeable and parity-testable;
+  * table slots past a sequence's live blocks may point anywhere (the engine
+    pads with block 0); their positions are ≥ cache_len so the masks kill
+    them, and v is zero-filled under the mask so stale pool garbage can never
+    poison the accumulator (0·Inf/NaN).
+
+This layout is what a future cross-chip sequence partition shards by: blocks,
+not dense slabs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_decode_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref,
+                         o_ref, lo_ref, mo_ref,
+                         acc_ref, m_ref, l_ref, *,
+                         block_size: int, sliding_window: int,
+                         attention_sinks: int, logit_softcap: float, nb: int):
+    b = pl.program_id(0)
+    kb = pl.program_id(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)          # (G, hd)
+    k = k_ref[0, 0].astype(jnp.float32)          # (block_size, hd) pool block
+    v = v_ref[0, 0].astype(jnp.float32)
+    cache_len = len_ref[b]
+
+    pos = kb * block_size + jax.lax.broadcasted_iota(
+        jnp.int32, (1, block_size), 1)[0]        # (block_size,)
+    row_valid = pos < cache_len
+    if sliding_window > 0:
+        in_window = pos >= (cache_len - sliding_window)
+        if attention_sinks > 0:  # StreamingLLM sinks stay attendable
+            in_window |= pos < attention_sinks
+        row_valid &= in_window
+    # stale pool blocks may hold anything — zero v under the mask so the
+    # weighted sum can never see Inf/NaN through a 0-weight column
+    v = jnp.where(row_valid[:, None], v, 0.0)
+
+    hd = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    s = jax.lax.dot_general(q * scale, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (G, bs)
+    if logit_softcap > 0.0:
+        s = logit_softcap * jnp.tanh(s / logit_softcap)
+    valid = jnp.broadcast_to(row_valid[None, :], s.shape)
+    s = jnp.where(valid, s, NEG_INF)
+
+    # paper §4.2.2 combine: rebase running (acc, l) onto the new max
+    m_prev = m_ref[...]                           # (G, 128) broadcast lanes
+    m_cur = jnp.max(s, axis=-1, keepdims=True)    # (G, 1)
+    m_new = jnp.maximum(m_prev, jnp.broadcast_to(m_cur, m_prev.shape))
+    alpha = jnp.exp(m_prev[:, :1] - m_new[:, :1])  # (G, 1)
+    p = jnp.exp(s - m_new[:, :1])                  # (G, block_size)
+    p = jnp.where(valid, p, 0.0)
+    l_new = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+    l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(kb == nb - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[:, :1], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+        lo_ref[0, 0] = l_ref[...]   # partial denominator (§4.2.2 combine)
+        mo_ref[0, 0] = m_ref[...]   # partial max
+
+
+@functools.partial(jax.jit, static_argnames=("sliding_window",
+                                             "attention_sinks",
+                                             "logit_softcap", "interpret",
+                                             "return_partials"))
+def paged_decode_attention(q, k_pool, v_pool, block_tables, cache_len, *,
+                           sliding_window: int = 0, attention_sinks: int = 0,
+                           logit_softcap: float = 0.0,
+                           interpret: bool = False,
+                           return_partials: bool = False):
+    """q: (B, Hkv, G, hd); k_pool/v_pool: HEAD-MAJOR
+    (Hkv, num_blocks, block_size, hd); block_tables: (B, nb) int32 pool-block
+    ids per sequence (pad slots with any valid id — masked); cache_len: (B,)
+    live tokens. Returns (B, Hkv, G, hd), or the (o, l, m) §4.2.2 triple over
+    the cached subset when return_partials — mergeable with other partials.
+
+    Per-step HBM traffic is exactly the live KV: each (head, block) tile is
+    one contiguous (block_size, hd) DMA addressed through the prefetched
+    block table; nothing is gathered into a dense slab first.
+    """
+    B, Hkv, G, hd = q.shape
+    block_size = k_pool.shape[2]
+    nb = block_tables.shape[1]
+
+    kernel = functools.partial(
+        _paged_decode_kernel, block_size=block_size,
+        sliding_window=sliding_window, attention_sinks=attention_sinks,
+        logit_softcap=logit_softcap, nb=nb)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,   # block_tables, cache_len
+        grid=(B, Hkv, nb),       # kb innermost: scratch carries the combine
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, kb, bt, ln: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, block_size, hd),
+                         lambda b, h, kb, bt, ln: (h, bt[b, kb], 0, 0)),
+            pl.BlockSpec((1, 1, block_size, hd),
+                         lambda b, h, kb, bt, ln: (h, bt[b, kb], 0, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, kb, bt, ln: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, G, 128),
+                         lambda b, h, kb, bt, ln: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, G, 128),
+                         lambda b, h, kb, bt, ln: (b, h, 0, 0)),
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((G, hd), jnp.float32),    # acc
+            pltpu.VMEM((G, 128), jnp.float32),   # running max (lane bcast)
+            pltpu.VMEM((G, 128), jnp.float32),   # running denom
+        ],
+    )
+    out, l_out, m_out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=(
+            jax.ShapeDtypeStruct((B, Hkv, G, hd), q.dtype),
+            jax.ShapeDtypeStruct((B, Hkv, G, 128), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hkv, G, 128), jnp.float32),
+        ),
+        interpret=interpret,
+    )(block_tables, cache_len, q, k_pool, v_pool)
+    if return_partials:
+        return out, l_out[..., 0], m_out[..., 0]
+    return out
+
+
+def paged_gather_dense(k_pool, v_pool, block_tables):
+    """Block-table gather into head-major dense (B, Hkv, nb·bs, hd) views —
+    the jnp reference data path (and the bytes the paged kernel avoids)."""
+    Hkv, _, bs, hd = k_pool.shape
+    B, nb = block_tables.shape
+    kc = jnp.swapaxes(k_pool[:, block_tables], 0, 1)  # (B, Hkv, nb, bs, hd)
+    vc = jnp.swapaxes(v_pool[:, block_tables], 0, 1)
+    return (kc.reshape(B, Hkv, nb * bs, hd), vc.reshape(B, Hkv, nb * bs, hd))
+
+
+def paged_decode_attention_jnp(q, k_pool, v_pool, block_tables, cache_len, *,
+                               sliding_window: int = 0,
+                               attention_sinks: int = 0,
+                               logit_softcap: float = 0.0):
+    """Pure-jnp reference for the paged kernel (CPU tests): gathers the dense
+    view through the block table and runs the dense oracle math."""
+    from repro.kernels import ref
+
+    kc, vc = paged_gather_dense(k_pool, v_pool, block_tables)
+    return ref.decode_attention_ref(q, kc, vc, cache_len,
+                                    sliding_window=sliding_window,
+                                    attention_sinks=attention_sinks,
+                                    logit_softcap=logit_softcap)

@@ -31,6 +31,24 @@ def decode_attention_ref(q, k_cache, v_cache, cache_len, *,
     return out.astype(q.dtype)
 
 
+def paged_decode_attention_ref(q, k_pool, v_pool, block_tables, cache_len, *,
+                               sliding_window: int = 0,
+                               attention_sinks: int = 0,
+                               logit_softcap: float = 0.0) -> jax.Array:
+    """Oracle for the paged flash-decode kernel: gather the dense head-major
+    view through the block table, then the dense oracle math.
+
+    q: (B, Hkv, G, hd); k_pool/v_pool: HEAD-MAJOR (Hkv, num_blocks,
+    block_size, hd); block_tables: (B, nb) int32; cache_len: (B,)."""
+    from repro.kernels.paged_decode_attention import paged_gather_dense
+
+    kc, vc = paged_gather_dense(k_pool, v_pool, block_tables)
+    return decode_attention_ref(q, kc, vc, cache_len,
+                                sliding_window=sliding_window,
+                                attention_sinks=attention_sinks,
+                                logit_softcap=logit_softcap)
+
+
 def rwkv6_scan_ref(r, k, v, w, u) -> jax.Array:
     """RWKV6 recurrence oracle.
 

@@ -157,11 +157,20 @@ def blockwise_attention(
 # rematerialisation in GSPMD) and mirrors Lamina's ownership split: the
 # memory pool places KV, the model program only reads it.
 # 'jnp' is the oracle backend; 'pallas' (repro/kernels/ops.py) the TPU kernel.
+# Each name has two registrations: the dense-cache partial (B, Hkv, S, hd)
+# and the PAGED partial that attends over the serving engines' block pool
+# (Hkv, num_blocks, block_size, hd) through a (B, nb) block table — the
+# default decode hot path (no per-step dense gather).
 _DECODE_BACKENDS = {}
+_PAGED_DECODE_BACKENDS = {}
 
 
 def register_decode_backend(name: str, fn) -> None:
     _DECODE_BACKENDS[name] = fn
+
+
+def register_paged_decode_backend(name: str, fn) -> None:
+    _PAGED_DECODE_BACKENDS[name] = fn
 
 
 def decode_attention_partial_jnp(q, k_cache, v_cache, cache_len, *,
@@ -226,6 +235,68 @@ def decode_attention_partial_jnp(q, k_cache, v_cache, cache_len, *,
 register_decode_backend("jnp", decode_attention_partial_jnp)
 
 
+def paged_decode_attention_partial_jnp(q, k_pool, v_pool, block_tables,
+                                       cache_len, *,
+                                       sliding_window: int = 0,
+                                       attention_sinks: int = 0,
+                                       logit_softcap: float = 0.0):
+    """Paged partial over the block pool — jnp reference path (CPU tests).
+
+    q: (B, H, hd); pools HEAD-MAJOR (Hkv, num_blocks, block_size, hd);
+    block_tables: (B, nb) int32; cache_len: (B,) stored tokens. Gathers the
+    dense head-major view through the table (the copy the Pallas kernel
+    avoids) and reuses the dense partial math, so 'jnp' and 'pallas' paged
+    backends are bit-comparable."""
+    from repro.kernels.paged_decode_attention import paged_gather_dense
+
+    kc, vc = paged_gather_dense(k_pool, v_pool, block_tables)
+    return decode_attention_partial_jnp(
+        q, kc, vc, cache_len, sliding_window=sliding_window,
+        attention_sinks=attention_sinks, logit_softcap=logit_softcap)
+
+
+register_paged_decode_backend("jnp", paged_decode_attention_partial_jnp)
+
+
+def _new_token_partial(q, k_new, v_new, *, logit_softcap: float = 0.0):
+    """The freshly projected token's 1-token §4.2.2 partial (B, H, ·)."""
+    from repro.core import combine as C
+
+    B, H, hd = q.shape
+    Hkv = k_new.shape[1]
+    G = H // Hkv
+    qg = q.reshape(B, Hkv, G, hd)
+    p_new = C.partial_attention(qg, k_new[:, :, None, None],
+                                v_new[:, :, None, None],
+                                logit_softcap=logit_softcap)
+    return C.Partial(a=p_new.a.reshape(B, H, hd),
+                     s=p_new.s.reshape(B, H), m=p_new.m.reshape(B, H))
+
+
+def paged_decode_attention_combine(q, k_pool, v_pool, block_tables,
+                                   cache_len, k_new, v_new, *,
+                                   backend: str = "jnp",
+                                   sliding_window: int = 0,
+                                   attention_sinks: int = 0,
+                                   logit_softcap: float = 0.0) -> jax.Array:
+    """Full paged decode attention = combine(pool partial, new-token partial).
+
+    The pool is read in place through the block table — the decode step's KV
+    traffic is exactly one pass over the live KV (paper §3's memory-bound
+    operand) plus the wire-delivered k_new/v_new (B, Hkv, hd)."""
+    from repro.core import combine as C
+
+    if backend not in _PAGED_DECODE_BACKENDS and backend == "pallas":
+        import repro.kernels.ops  # noqa: F401 — registers the kernel backend
+
+    p_prev = _PAGED_DECODE_BACKENDS[backend](
+        q, k_pool, v_pool, block_tables, cache_len,
+        sliding_window=sliding_window, attention_sinks=attention_sinks,
+        logit_softcap=logit_softcap)
+    p_new = _new_token_partial(q, k_new, v_new, logit_softcap=logit_softcap)
+    return C.finalize(C.combine(p_prev, p_new)).astype(q.dtype)
+
+
 def decode_attention_combine(q, k_cache, v_cache, cache_len, k_new, v_new, *,
                              backend: str = "jnp", sliding_window: int = 0,
                              attention_sinks: int = 0,
@@ -239,21 +310,13 @@ def decode_attention_combine(q, k_cache, v_cache, cache_len, k_new, v_new, *,
     if backend not in _DECODE_BACKENDS and backend == "pallas":
         import repro.kernels.ops  # noqa: F401 — registers the kernel backend
 
-    B, H, hd = q.shape
-    Hkv = k_new.shape[1]
-    G = H // Hkv
     kw = {}
     if k_scale is not None:
         kw = {"k_scale": k_scale, "v_scale": v_scale}
     p_prev = _DECODE_BACKENDS[backend](
         q, k_cache, v_cache, cache_len, sliding_window=sliding_window,
         attention_sinks=attention_sinks, logit_softcap=logit_softcap, **kw)
-    qg = q.reshape(B, Hkv, G, hd)
-    p_new = C.partial_attention(qg, k_new[:, :, None, None],
-                                v_new[:, :, None, None],
-                                logit_softcap=logit_softcap)
-    p_new = C.Partial(a=p_new.a.reshape(B, H, hd),
-                      s=p_new.s.reshape(B, H), m=p_new.m.reshape(B, H))
+    p_new = _new_token_partial(q, k_new, v_new, logit_softcap=logit_softcap)
     return C.finalize(C.combine(p_prev, p_new)).astype(q.dtype)
 
 
@@ -325,5 +388,28 @@ def attention_decode_step(params, cfg: ModelConfig, x: jax.Array,
         attention_sinks=cfg.attention_sinks if window else 0,
         logit_softcap=cfg.attn_logit_softcap,
         k_scale=k_scale, v_scale=v_scale)
+    y = out_project(params, out[:, None])
+    return y, k[:, 0], v[:, 0]
+
+
+def attention_decode_step_paged(params, cfg: ModelConfig, x: jax.Array,
+                                k_pool: jax.Array, v_pool: jax.Array,
+                                block_tables: jax.Array,
+                                cache_len: jax.Array, *,
+                                is_local: bool = False,
+                                backend: str = "jnp"):
+    """One-token decode straight over the paged block pool (the serving hot
+    path — no dense per-step gather). x: (B, 1, d); pools HEAD-MAJOR
+    (Hkv, num_blocks, block_size, hd); block_tables (B, nb);
+    cache_len = tokens ALREADY stored. Returns (y, k_new, v_new) — KV
+    placement stays the memory pool's job (serving/kvcache.py)."""
+    positions = cache_len[:, None]  # new token position, 0-based
+    q, k, v = qkv_project(params, cfg, x, positions)
+    window = cfg.sliding_window if (is_local or not cfg.local_global) else 0
+    out = paged_decode_attention_combine(
+        q[:, 0], k_pool, v_pool, block_tables, cache_len, k[:, 0], v[:, 0],
+        backend=backend, sliding_window=int(window),
+        attention_sinks=cfg.attention_sinks if window else 0,
+        logit_softcap=cfg.attn_logit_softcap)
     y = out_project(params, out[:, None])
     return y, k[:, 0], v[:, 0]

@@ -12,9 +12,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import ssm
-from repro.models.attention import (attention_decode_step, attention_forward,
-                                    blockwise_attention, init_attention,
-                                    out_project, qkv_project)
+from repro.models.attention import (attention_decode_step,
+                                    attention_decode_step_paged,
+                                    attention_forward, blockwise_attention,
+                                    init_attention, out_project, qkv_project)
 from repro.models.common import ModelConfig, dense_init, rms_norm
 from repro.models.ffn import ffn_forward, init_ffn
 from repro.models.moe import init_moe, moe_forward
@@ -49,10 +50,16 @@ def dense_block(params: Dict, cfg: ModelConfig, x: jax.Array, *,
     h = rms_norm(x, params["norm1"], cfg.norm_eps)
     new_cache: Dict = {}
     if mode == "decode":
-        attn, k_new, v_new = attention_decode_step(
-            params["attn"], cfg, h, cache["k"], cache["v"], cache["len"],
-            is_local=is_local, backend=backend,
-            k_scale=cache.get("k_scale"), v_scale=cache.get("v_scale"))
+        if "k_pool" in cache:  # paged: attend over the block pool in place
+            attn, k_new, v_new = attention_decode_step_paged(
+                params["attn"], cfg, h, cache["k_pool"], cache["v_pool"],
+                cache["block_tables"], cache["len"],
+                is_local=is_local, backend=backend)
+        else:
+            attn, k_new, v_new = attention_decode_step(
+                params["attn"], cfg, h, cache["k"], cache["v"], cache["len"],
+                is_local=is_local, backend=backend,
+                k_scale=cache.get("k_scale"), v_scale=cache.get("v_scale"))
         new_cache = {"k_new": k_new, "v_new": v_new}
     else:
         attn, k, v = attention_forward(params["attn"], cfg, h, positions,

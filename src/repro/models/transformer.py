@@ -640,6 +640,68 @@ def decode_step(params: Params, cfg: ModelConfig, tokens: jax.Array,
     return logits, new_cache
 
 
+def decode_step_paged(params: Params, cfg: ModelConfig, tokens: jax.Array,
+                      k_pool: jax.Array, v_pool: jax.Array,
+                      block_tables: jax.Array, cache_len: jax.Array, *,
+                      backend: str = "jnp",
+                      moe_group_size: int = 256) -> Tuple[jax.Array, Dict]:
+    """One decoding iteration straight over the paged KV block pool — the
+    serving engines' default hot path (no per-step dense gather/transposes).
+
+    tokens: (B,) int32; k_pool/v_pool: HEAD-MAJOR (L, Hkv, num_blocks,
+    block_size, hd) — the PagedKVCache pools passed by reference;
+    block_tables: (B, nb) int32; cache_len: (B,) tokens ALREADY stored.
+    Returns (logits, updates) with k_new/v_new (L, B, Hkv, hd) — placement
+    stays the memory pool's job (PagedKVCache.write_tokens).
+    """
+    if cfg.family not in ("dense", "vlm", "moe"):
+        raise ValueError("paged decode serves KV-cache dense stacks; "
+                         f"got family={cfg.family}")
+    if isinstance(params["layers"], (list, tuple)):
+        raise ValueError("paged decode requires stacked layer params "
+                         "(per-layer buffer layout uses the dense path)")
+    cur_len = cache_len
+    x = jnp.take(params["embed"], tokens[:, None], axis=0)
+    if cfg.tie_embeddings:
+        x = x * jnp.asarray(jnp.sqrt(float(cfg.d_model)), x.dtype)
+
+    pair = 2 if cfg.local_global else 1
+    layers, kp, vp = params["layers"], k_pool, v_pool
+    if pair == 2:
+        layers, kp, vp = jax.tree.map(
+            lambda a: a.reshape((a.shape[0] // 2, 2) + a.shape[1:]),
+            (layers, kp, vp))
+
+    def body(carry, xs):
+        h, aux = carry
+        layer_p, kp_l, vp_l = xs
+        new_kv = []
+        for j in range(pair):
+            p = _tree_index(layer_p, j) if pair == 2 else layer_p
+            lc = {"k_pool": kp_l[j] if pair == 2 else kp_l,
+                  "v_pool": vp_l[j] if pair == 2 else vp_l,
+                  "block_tables": block_tables, "len": cur_len}
+            is_local = (j == 0) if cfg.local_global else False
+            h, c, a = blocks.dense_block(
+                p, cfg, h, mode="decode", is_local=is_local, cache=lc,
+                backend=backend, moe_group_size=moe_group_size)
+            new_kv.append(c)
+            aux = aux + a
+        ys = jax.tree.map(lambda *c: jnp.stack(c), *new_kv) if pair == 2 \
+            else new_kv[0]
+        return (h, aux), ys
+
+    (x, _), kv = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                              (layers, kp, vp), unroll=cfg.lower_unrolled)
+    if pair == 2:
+        kv = jax.tree.map(
+            lambda a: a.reshape((a.shape[0] * 2,) + a.shape[2:]), kv)
+    updates = {"k_new": kv["k_new"], "v_new": kv["v_new"],
+               "len": cur_len + 1}
+    logits = _head(params, cfg, x[:, 0])
+    return logits, updates
+
+
 def _decode_step_listed(params, cfg: ModelConfig, x, cache, cur_len,
                         new_cache, *, backend: str, moe_group_size: int):
     """Decode with per-layer buffer layout (see _dense_stack docstring)."""

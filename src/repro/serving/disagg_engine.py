@@ -12,6 +12,10 @@ lowerable on the TPU mesh:
   * every per-layer transfer (send-Q, send-KV, recv-output) is accounted in
     bytes — tests assert the per-iteration total equals the paper's
     (2 + 2/G)·e·d·B·L formula (§3.1);
+  * the pool's KV read is PAGED: workers attend over the engine's head-major
+    block pool in place through per-sequence block tables
+    (``attend_paged``) — per-step traffic is one pass over the live KV, with
+    no dense gather or transposes on the hot path;
   * resource-utilisation overlapping (§4.2.2): attention over the `prev`
     tokens is issued as soon as q is available; the `new` token's
     contribution is merged with the combine identity after K/V arrive. The
@@ -135,6 +139,57 @@ class AttentionWorkerPool:
         self._account(q, k_new, v_new, out, account)
         return out
 
+    def attend_paged(self, q, k_pool, v_pool, block_tables, cache_len,
+                     k_new, v_new, *, sliding_window: int = 0,
+                     logit_softcap: float = 0.0) -> jax.Array:
+        """Paged variant of :meth:`attend` — the engine's decode hot path.
+
+        q: (B, H, hd); k_pool/v_pool: one layer's HEAD-MAJOR pool slice
+        (Hkv, num_blocks, block_size, hd) holding the STORED prefix;
+        block_tables (B, nb); k_new/v_new (B, Hkv, hd) arrive over the wire.
+        Each worker reads its partition of the pool *in place* (head-sliced
+        pool, or request-sliced table) and computes
+        combine(pool partial, new partial) — §4.2.2 across workers too.
+        Per-worker bytes are the allocated table footprint (static shapes;
+        live-token balance is what the head/request benchmark measures)."""
+        from repro.models.attention import paged_decode_attention_combine
+
+        B, H, hd = q.shape
+        Hkv, _, bs, _ = k_pool.shape
+        S_alloc = block_tables.shape[1] * bs
+        kw = dict(sliding_window=sliding_window, logit_softcap=logit_softcap,
+                  backend=self.backend)
+        if self.partition == "head":
+            hk = Hkv // self.n
+            g = H // Hkv
+            outs = []
+            for wid in range(self.n):
+                sl = slice(wid * hk, (wid + 1) * hk)
+                qs = q.reshape(B, Hkv, g, hd)[:, sl].reshape(B, hk * g, hd)
+                o = paged_decode_attention_combine(
+                    qs, k_pool[sl], v_pool[sl], block_tables, cache_len,
+                    k_new[:, sl], v_new[:, sl], **kw)
+                outs.append(o.reshape(B, hk, g, hd))
+                self.per_worker_kv_bytes[wid] += \
+                    2 * B * hk * S_alloc * hd * BYTES
+            out = jnp.concatenate(outs, axis=1).reshape(B, H, hd)
+        elif self.partition == "request":
+            splits = jnp.array_split(jnp.arange(B), self.n)
+            outs = []
+            for wid, idx in enumerate(splits):
+                if len(idx) == 0:
+                    continue
+                o = paged_decode_attention_combine(
+                    q[idx], k_pool, v_pool, block_tables[idx],
+                    cache_len[idx], k_new[idx], v_new[idx], **kw)
+                outs.append(o)
+                self.per_worker_kv_bytes[wid] += \
+                    2 * len(idx) * Hkv * S_alloc * hd * BYTES
+            out = jnp.concatenate(outs, axis=0)
+        else:
+            raise ValueError(self.partition)
+        return out
+
     # overlap mode shares the same math (combine is exact); the distinction
     # is the *schedule* — prev-partial issues right after send-Q, the new
     # token merges after send-KV — which the latency model in
@@ -160,9 +215,10 @@ class DisaggEngine(Engine):
         self._decode_jit = jax.jit(self._disagg_decode)
 
     # ----- the sliced decode step (converter output, executed) -----
-    def _disagg_decode(self, params, tokens, cache):
+    def _disagg_decode(self, params, tokens, k_pool, v_pool, block_tables,
+                       lens):
         cfg = self.cfg
-        cur_len = cache["len"]  # stored tokens
+        cur_len = lens  # stored tokens
         x = jnp.take(params["embed"], tokens[:, None], axis=0)
         if cfg.tie_embeddings:
             x = x * jnp.asarray(jnp.sqrt(float(cfg.d_model)), x.dtype)
@@ -178,9 +234,9 @@ class DisaggEngine(Engine):
             q, k, v = qkv_project(p["attn"], cfg, h, positions)
             ks.append(k[:, 0])
             vs.append(v[:, 0])
-            # ---- attention pool (combine prefix + wire-delivered new) ----
-            attn = self.pool.attend(
-                q[:, 0], cache["k"][layer], cache["v"][layer], cur_len,
+            # ---- attention pool: workers read the paged pool in place ----
+            attn = self.pool.attend_paged(
+                q[:, 0], k_pool[layer], v_pool[layer], block_tables, cur_len,
                 k[:, 0], v[:, 0], sliding_window=int(window),
                 logit_softcap=cfg.attn_logit_softcap)
             # ---- model slice 1: o-proj + residual + FFN ----
@@ -231,7 +287,6 @@ class DisaggEngine(Engine):
             self.kv.allocate(req.rid, len(known))
             toks = jnp.asarray([known], jnp.int32)
             _, cache = self._prefill_jit(self.params, {"tokens": toks})
-            # prefill cache is head-major (L, 1, Hkv, S, hd); pool seq-major
-            self.kv.write_prefill(req.rid,
-                                  jnp.swapaxes(cache["k"][:, 0], 1, 2),
-                                  jnp.swapaxes(cache["v"][:, 0], 1, 2))
+            # prefill cache is head-major (L, 1, Hkv, S, hd) — pool layout
+            self.kv.write_prefill(req.rid, cache["k"][:, 0],
+                                  cache["v"][:, 0])

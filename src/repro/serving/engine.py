@@ -3,9 +3,13 @@ against: continuous batching (Orca) + paged KV (PagedAttention), all
 operators on one device pool.
 
 CPU-scale correctness engine: drives the real model (`transformer.prefill` /
-`transformer.decode_step`) against the paged pool, gathering dense KV views
-per iteration and scattering the new token's K/V back. Designed for reduced
-configs in tests/examples; the dry-run path exercises the full-size shapes.
+`transformer.decode_step_paged`) straight over the paged block pool. The
+decode hot path is fully paged: attention consumes the head-major pools in
+place through a per-iteration block table (no dense gather, no transposes —
+per-step KV traffic is exactly one read of the live KV), and the new token's
+K/V lands with one batched `write_tokens` scatter. Sampling is per-request
+(each Request's own SamplingParams). Designed for reduced configs in
+tests/examples; the dry-run path exercises the full-size shapes.
 """
 from __future__ import annotations
 
@@ -21,7 +25,7 @@ from repro.models import transformer
 from repro.models.common import ModelConfig
 from repro.serving.kvcache import PagedKVCache
 from repro.serving.request import Request, SamplingParams, State
-from repro.serving.sampler import sample
+from repro.serving.sampler import sample, sample_batch
 from repro.serving.scheduler import Scheduler
 
 
@@ -63,8 +67,8 @@ class Engine:
         self.key = jax.random.PRNGKey(seed)
         self.stats = EngineStats()
         self._decode_jit = jax.jit(
-            lambda p, t, c: transformer.decode_step(
-                p, cfg, t, c, backend=decode_backend))
+            lambda p, t, kp, vp, bt, ln: transformer.decode_step_paged(
+                p, cfg, t, kp, vp, bt, ln, backend=decode_backend))
         self._prefill_jit = jax.jit(
             lambda p, b: transformer.prefill(p, cfg, b,
                                              max_seq=b["tokens"].shape[1]))
@@ -76,10 +80,8 @@ class Engine:
     def _prefill(self, req: Request) -> None:
         toks = jnp.asarray([req.prompt], jnp.int32)
         logits, cache = self._prefill_jit(self.params, {"tokens": toks})
-        # cache k/v are head-major (L, 1, Hkv, S, hd); pool stores seq-major
-        self.kv.write_prefill(req.rid,
-                              jnp.swapaxes(cache["k"][:, 0], 1, 2),
-                              jnp.swapaxes(cache["v"][:, 0], 1, 2))
+        # cache k/v are head-major (L, 1, Hkv, S, hd) — the pool's layout
+        self.kv.write_prefill(req.rid, cache["k"][:, 0], cache["v"][:, 0])
         self.key, sub = jax.random.split(self.key)
         tok = sample(logits, sub, req.params.temperature, req.params.top_k)
         req.record_token(int(tok[0]))
@@ -91,25 +93,28 @@ class Engine:
         if not running:
             return
         ids = [r.rid for r in running]
-        lens = [self.kv.lengths[r.rid] for r in running]  # stored tokens
-        pad = -(-max(lens) // self.kv.block_size) * self.kv.block_size
-        k, v, _ = self.kv.gather(ids, pad)
-        # engine pool is seq-major; the model wants head-major (§Perf #3)
-        cache = {"k": jnp.swapaxes(k, 2, 3), "v": jnp.swapaxes(v, 2, 3),
-                 "len": jnp.asarray(lens, jnp.int32)}
+        # paged hot path: the model attends over the pool in place through
+        # the block table — no dense gather, no transposes
+        tables, lens = self.kv.block_table_batch(ids)
         tokens = jnp.asarray([r.output[-1] for r in running], jnp.int32)
         t0 = time.time()
-        logits, updates = self._decode_jit(self.params, tokens, cache)
+        logits, updates = self._decode_jit(
+            self.params, tokens, self.kv.k_pool, self.kv.v_pool,
+            jnp.asarray(tables), jnp.asarray(lens))
         logits.block_until_ready()
         dt = time.time() - t0
         # placement is the memory pool's job: append the input token's K/V
-        for i, r in enumerate(running):
+        # (allocator bookkeeping per sequence, then ONE batched scatter)
+        positions = [int(n) for n in lens]
+        for r in running:
             self.kv.append_token(r.rid)
-            self.kv.write_token(r.rid, updates["k_new"][:, i],
-                                updates["v_new"][:, i], lens[i])
+        self.kv.write_tokens(ids, updates["k_new"], updates["v_new"],
+                             positions)
         self.key, sub = jax.random.split(self.key)
-        toks = sample(logits, sub,
-                      running[0].params.temperature, running[0].params.top_k)
+        toks = sample_batch(
+            logits, sub,
+            np.asarray([r.params.temperature for r in running], np.float32),
+            np.asarray([r.params.top_k for r in running], np.int32))
         for i, r in enumerate(running):
             r.record_token(int(toks[i]))
         self.stats.steps += 1

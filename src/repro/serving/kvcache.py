@@ -2,8 +2,14 @@
 
 Fixed-size blocks of `block_size` tokens from a global pool; per-sequence
 block tables; allocation is O(1) off a free list. The pool arrays are the
-single source of truth for KV bytes — the engines gather per-step dense
-views for the batched decode and scatter the new token's K/V back.
+single source of truth for KV bytes and are HEAD-MAJOR
+``(L, Hkv, num_blocks, block_size, hd)`` so one (layer, head, block) tile is
+a contiguous ``(block_size, hd)`` DMA — the layout the paged flash-decode
+kernel (``kernels/paged_decode_attention.py``) streams in place through
+``block_table_batch()``. The engines never gather a dense per-step view on
+the hot path: attention reads the pool through the table, and the new
+token's K/V lands with one batched ``write_tokens`` scatter. ``gather()``
+survives only as the dense test oracle.
 
 Invariants (hypothesis-tested in tests/test_kvcache.py):
   * a block is owned by at most one sequence,
@@ -14,7 +20,7 @@ Invariants (hypothesis-tested in tests/test_kvcache.py):
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -36,8 +42,8 @@ class PagedKVCache:
     def __post_init__(self):
         hd = self.cfg.resolved_head_dim
         L = self._n_kv_layers()
-        self.k_pool = jnp.zeros((L, self.num_blocks, self.block_size,
-                                 self.cfg.num_kv_heads, hd), self.cfg.dtype)
+        self.k_pool = jnp.zeros((L, self.cfg.num_kv_heads, self.num_blocks,
+                                 self.block_size, hd), self.cfg.dtype)
         self.v_pool = jnp.zeros_like(self.k_pool)
         self.free: List[int] = list(range(self.num_blocks))
         self.tables: Dict[int, List[int]] = {}
@@ -83,32 +89,66 @@ class PagedKVCache:
         toks = sum(self.lengths.values())
         return toks / (self.num_blocks * self.block_size)
 
+    # ---------------- hot-path views ----------------
+    def block_table_batch(self, seq_ids: Sequence[int]
+                          ) -> Tuple[np.ndarray, np.ndarray]:
+        """Batched (B, nb) block table + (B,) lengths for the paged decode
+        step. nb covers the longest live sequence; pad slots are block 0
+        (their positions are ≥ cache_len, so the kernel masks them)."""
+        lens = np.array([self.lengths[sid] for sid in seq_ids], np.int32)
+        nb = max(1, self.blocks_needed(int(lens.max()))) if len(lens) else 1
+        tables = np.zeros((len(seq_ids), nb), np.int32)
+        for i, sid in enumerate(seq_ids):
+            t = self.tables[sid][:nb]
+            tables[i, :len(t)] = t
+        return tables, lens
+
     # ---------------- data movement ----------------
     def write_prefill(self, seq_id: int, k: jax.Array, v: jax.Array) -> None:
-        """k/v: (L, S, Hkv, hd) for this sequence's prompt."""
-        S = k.shape[1]
+        """k/v: HEAD-MAJOR (L, Hkv, S, hd) for this sequence's prompt — the
+        prefill cache layout, stored without any transpose."""
+        S = k.shape[2]
         table = self.tables[seq_id]
         pad = len(table) * self.block_size - S
         if pad:
-            k = jnp.pad(k, [(0, 0), (0, pad), (0, 0), (0, 0)])
-            v = jnp.pad(v, [(0, 0), (0, pad), (0, 0), (0, 0)])
-        kb = k.reshape(k.shape[0], len(table), self.block_size, *k.shape[2:])
+            k = jnp.pad(k, [(0, 0), (0, 0), (0, pad), (0, 0)])
+            v = jnp.pad(v, [(0, 0), (0, 0), (0, pad), (0, 0)])
+        kb = k.reshape(k.shape[0], k.shape[1], len(table), self.block_size,
+                       k.shape[3])
         vb = v.reshape(*kb.shape)
         idx = jnp.asarray(table)
-        self.k_pool = self.k_pool.at[:, idx].set(kb)
-        self.v_pool = self.v_pool.at[:, idx].set(vb)
+        self.k_pool = self.k_pool.at[:, :, idx].set(kb)
+        self.v_pool = self.v_pool.at[:, :, idx].set(vb)
 
     def write_token(self, seq_id: int, k: jax.Array, v: jax.Array,
                     position: int) -> None:
         """k/v: (L, Hkv, hd) for one token at `position` (0-based)."""
         blk = self.tables[seq_id][position // self.block_size]
         off = position % self.block_size
-        self.k_pool = self.k_pool.at[:, blk, off].set(k)
-        self.v_pool = self.v_pool.at[:, blk, off].set(v)
+        self.k_pool = self.k_pool.at[:, :, blk, off].set(k)
+        self.v_pool = self.v_pool.at[:, :, blk, off].set(v)
+
+    def write_tokens(self, seq_ids: Sequence[int], k_new: jax.Array,
+                     v_new: jax.Array, positions: Sequence[int]) -> None:
+        """Batched scatter of one token per sequence — the decode step's
+        single pool write. k_new/v_new: (L, B, Hkv, hd) as produced by the
+        model's decode updates; positions: per-sequence 0-based slots
+        (the pre-append lengths). Replaces the per-sequence host loop."""
+        blk = jnp.asarray([self.tables[sid][p // self.block_size]
+                           for sid, p in zip(seq_ids, positions)], jnp.int32)
+        off = jnp.asarray([p % self.block_size for p in positions], jnp.int32)
+        kn = jnp.swapaxes(k_new, 1, 2)  # (L, Hkv, B, hd)
+        vn = jnp.swapaxes(v_new, 1, 2)
+        self.k_pool = self.k_pool.at[:, :, blk, off].set(kn)
+        self.v_pool = self.v_pool.at[:, :, blk, off].set(vn)
 
     def gather(self, seq_ids: List[int], pad_len: int
                ) -> Tuple[jax.Array, jax.Array, jax.Array]:
-        """Dense (L, B, pad_len, Hkv, hd) views + lengths for the batch."""
+        """Dense (L, B, pad_len, Hkv, hd) views + lengths for the batch.
+
+        TEST ORACLE ONLY: the serving engines attend over the pool in place
+        (block_table_batch + the paged kernel); this materialised copy is
+        exactly the per-step traffic the paged path eliminates."""
         nb = -(-pad_len // self.block_size)
         tables = np.zeros((len(seq_ids), nb), np.int32)
         lens = np.zeros((len(seq_ids),), np.int32)
@@ -116,11 +156,13 @@ class PagedKVCache:
             t = self.tables[sid][:nb]
             tables[i, :len(t)] = t
             lens[i] = self.lengths[sid]
-        idx = jnp.asarray(tables)  # (B, nb)
-        k = self.k_pool[:, idx]    # (L, B, nb, bs, Hkv, hd)
-        v = self.v_pool[:, idx]
-        L = k.shape[0]
+        idx = jnp.asarray(tables)      # (B, nb)
+        k = self.k_pool[:, :, idx]     # (L, Hkv, B, nb, bs, hd)
+        v = self.v_pool[:, :, idx]
+        L, Hkv = k.shape[0], k.shape[1]
         B = len(seq_ids)
-        k = k.reshape(L, B, nb * self.block_size, *k.shape[4:])[:, :, :pad_len]
-        v = v.reshape(L, B, nb * self.block_size, *v.shape[4:])[:, :, :pad_len]
+        k = jnp.transpose(k, (0, 2, 3, 4, 1, 5)).reshape(
+            L, B, nb * self.block_size, Hkv, -1)[:, :, :pad_len]
+        v = jnp.transpose(v, (0, 2, 3, 4, 1, 5)).reshape(
+            L, B, nb * self.block_size, Hkv, -1)[:, :, :pad_len]
         return k, v, jnp.asarray(lens)

@@ -92,9 +92,10 @@ class MoEOffloadEngine(DisaggEngine):
         self.expert_pool = ExpertWorkerPool(cfg, n_expert_workers)
         self._decode_jit = jax.jit(self._disagg_decode_moe)
 
-    def _disagg_decode_moe(self, params, tokens, cache):
+    def _disagg_decode_moe(self, params, tokens, k_pool, v_pool,
+                           block_tables, lens):
         cfg = self.cfg
-        cur_len = cache["len"]
+        cur_len = lens
         x = jnp.take(params["embed"], tokens[:, None], axis=0)
         positions = cur_len[:, None]
         ks, vs = [], []
@@ -105,9 +106,9 @@ class MoEOffloadEngine(DisaggEngine):
             q, k, v = qkv_project(p["attn"], cfg, h, positions)
             ks.append(k[:, 0])
             vs.append(v[:, 0])
-            # attention pool
-            attn = self.pool.attend(
-                q[:, 0], cache["k"][layer], cache["v"][layer], cur_len,
+            # attention pool (paged: workers read the block pool in place)
+            attn = self.pool.attend_paged(
+                q[:, 0], k_pool[layer], v_pool[layer], block_tables, cur_len,
                 k[:, 0], v[:, 0], logit_softcap=cfg.attn_logit_softcap)
             x = x + out_project(p["attn"], attn[:, None])
             # expert pool (paper §7): router runs on the model worker, the

@@ -1,4 +1,6 @@
-"""Token sampling: greedy / temperature / top-k."""
+"""Token sampling: greedy / temperature / top-k — batch-uniform and
+per-request variants (a continuous batch mixes every request's own
+SamplingParams in one decode iteration)."""
 from __future__ import annotations
 
 import jax
@@ -7,7 +9,8 @@ import jax.numpy as jnp
 
 def sample(logits: jax.Array, key, temperature: float = 0.0,
            top_k: int = 0) -> jax.Array:
-    """logits: (B, V) -> (B,) int32."""
+    """logits: (B, V) -> (B,) int32. One set of params for the whole batch
+    (prefill / single-request paths)."""
     if temperature <= 0.0:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
     logits = logits.astype(jnp.float32) / temperature
@@ -16,3 +19,26 @@ def sample(logits: jax.Array, key, temperature: float = 0.0,
         cutoff = vals[..., -1:]
         logits = jnp.where(logits < cutoff, -jnp.inf, logits)
     return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
+
+
+def sample_batch(logits: jax.Array, key, temperatures: jax.Array,
+                 top_ks: jax.Array) -> jax.Array:
+    """Per-request sampling for a continuous batch.
+
+    logits: (B, V); temperatures: (B,) float (<= 0 → greedy for that row);
+    top_ks: (B,) int (0 → full softmax). Rows are independent: each gets its
+    own temperature scaling and top-k cutoff (a sort-based cutoff, since
+    ``lax.top_k`` needs a static k and k varies per row). Greedy rows are
+    argmax regardless of the drawn sample. Returns (B,) int32."""
+    logits = logits.astype(jnp.float32)
+    V = logits.shape[-1]
+    temps = jnp.asarray(temperatures, jnp.float32)
+    ks = jnp.asarray(top_ks, jnp.int32)
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    scaled = logits / jnp.maximum(temps, 1e-6)[:, None]
+    srt = jnp.sort(scaled, axis=-1)[:, ::-1]            # descending
+    kidx = jnp.where(ks > 0, jnp.minimum(ks, V) - 1, V - 1)
+    cutoff = jnp.take_along_axis(srt, kidx[:, None], axis=-1)
+    scaled = jnp.where(scaled < cutoff, -jnp.inf, scaled)
+    drawn = jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)
+    return jnp.where(temps <= 0.0, greedy, drawn)

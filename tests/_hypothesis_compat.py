@@ -1,0 +1,36 @@
+"""Optional-hypothesis shim: property tests skip cleanly (instead of the
+whole module erroring at collection) when the container lacks `hypothesis`.
+
+Usage in test modules:  ``from _hypothesis_compat import given, settings, st``
+— identical to ``from hypothesis import ...`` when the package is present;
+otherwise ``@given`` turns the test into a skip and strategy construction
+becomes a no-op.
+"""
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover — optional dependency
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Stands in for `strategies`: any strategy constructor returns None
+        (|given| below never inspects them)."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()
+
+    def settings(*a, **k):
+        return lambda fn: fn
+
+    def given(*a, **k):
+        def deco(fn):
+            def skipped():
+                pytest.skip("hypothesis not installed")
+            skipped.__name__ = fn.__name__
+            skipped.__doc__ = fn.__doc__
+            return skipped
+        return deco

@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.configs import registry
 from repro.serving.kvcache import OutOfBlocks, PagedKVCache
@@ -62,25 +62,52 @@ def test_write_gather_roundtrip():
     data = {}
     for sid, n in lens.items():
         kv.allocate(sid, n)
-        k = jnp.asarray(rng.standard_normal((L, n, Hkv, hd)), cfg.dtype)
-        v = jnp.asarray(rng.standard_normal((L, n, Hkv, hd)), cfg.dtype)
+        # prefill hands the pool HEAD-MAJOR (L, Hkv, S, hd) — no transpose
+        k = jnp.asarray(rng.standard_normal((L, Hkv, n, hd)), cfg.dtype)
+        v = jnp.asarray(rng.standard_normal((L, Hkv, n, hd)), cfg.dtype)
         kv.write_prefill(sid, k, v)
         data[sid] = (k, v)
-    # append one token each
+    # append one token each: allocator bookkeeping + ONE batched scatter
+    k1 = jnp.asarray(rng.standard_normal((L, 2, Hkv, hd)), cfg.dtype)
+    v1 = jnp.asarray(rng.standard_normal((L, 2, Hkv, hd)), cfg.dtype)
+    positions = [lens[sid] for sid in (1, 2)]
     for sid in lens:
         kv.append_token(sid)
-        k1 = jnp.asarray(rng.standard_normal((L, Hkv, hd)), cfg.dtype)
-        v1 = jnp.asarray(rng.standard_normal((L, Hkv, hd)), cfg.dtype)
-        kv.write_token(sid, k1, v1, lens[sid])
-        data[sid] = (jnp.concatenate([data[sid][0], k1[:, None]], 1),
-                     jnp.concatenate([data[sid][1], v1[:, None]], 1))
+    kv.write_tokens([1, 2], k1, v1, positions)
+    for i, sid in enumerate((1, 2)):
+        data[sid] = (jnp.concatenate([data[sid][0], k1[:, i, :, None]], 2),
+                     jnp.concatenate([data[sid][1], v1[:, i, :, None]], 2))
     pad = 12
     k, v, out_lens = kv.gather([1, 2], pad)
-    assert k.shape == (L, 2, pad, Hkv, hd)
+    assert k.shape == (L, 2, pad, Hkv, hd)  # gather stays seq-major (oracle)
     for i, sid in enumerate([1, 2]):
         n = lens[sid] + 1
         assert int(out_lens[i]) == n
-        np.testing.assert_array_equal(np.asarray(k[:, i, :n]),
-                                      np.asarray(data[sid][0]))
-        np.testing.assert_array_equal(np.asarray(v[:, i, :n]),
-                                      np.asarray(data[sid][1]))
+        np.testing.assert_array_equal(
+            np.asarray(k[:, i, :n]),
+            np.asarray(jnp.swapaxes(data[sid][0], 1, 2)))
+        np.testing.assert_array_equal(
+            np.asarray(v[:, i, :n]),
+            np.asarray(jnp.swapaxes(data[sid][1], 1, 2)))
+
+
+def test_write_token_single_matches_batched():
+    """Per-sequence write_token (compat path) lands in the same slots as the
+    batched write_tokens scatter."""
+    cfg = registry.get_smoke_config("llama3-8b")
+    L, Hkv, hd = cfg.num_layers, cfg.num_kv_heads, cfg.resolved_head_dim
+    rng = np.random.default_rng(1)
+    a, b = PagedKVCache(cfg, 16, 4), PagedKVCache(cfg, 16, 4)
+    for kv in (a, b):
+        kv.allocate(7, 5)
+        kv.allocate(9, 3)
+    k1 = jnp.asarray(rng.standard_normal((L, 2, Hkv, hd)), cfg.dtype)
+    v1 = jnp.asarray(rng.standard_normal((L, 2, Hkv, hd)), cfg.dtype)
+    for kv in (a, b):
+        kv.append_token(7)
+        kv.append_token(9)
+    a.write_tokens([7, 9], k1, v1, [5, 3])
+    b.write_token(7, k1[:, 0], v1[:, 0], 5)
+    b.write_token(9, k1[:, 1], v1[:, 1], 3)
+    np.testing.assert_array_equal(np.asarray(a.k_pool), np.asarray(b.k_pool))
+    np.testing.assert_array_equal(np.asarray(a.v_pool), np.asarray(b.v_pool))

@@ -3,7 +3,7 @@ for swept (n, steps) and the executable rotation demo."""
 import jax
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.configs import registry
 from repro.core import converter, pipeline

@@ -30,7 +30,10 @@ def test_specs_build_for_all_archs_and_shapes():
     from repro.models import transformer
 
     # AbstractMesh: production shape without needing 256 devices
-    mesh = jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+    try:  # jax >= 0.5 signature
+        mesh = jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+    except TypeError:  # 0.4.x takes (name, size) pairs
+        mesh = jax.sharding.AbstractMesh((("data", 16), ("model", 16)))
     for arch in registry.ASSIGNED:
         cfg = registry.get_config(arch)
         pshape = jax.eval_shape(
@@ -80,6 +83,39 @@ def test_seq_and_head_parallel_attention_match_oracle():
     assert "PARALLEL_OK" in out
 
 
+def test_paged_head_and_request_parallel_attention_match_oracle():
+    """Pool-native shard_map backends: head-sharded pool and batch-sharded
+    block tables must both reproduce the paged jnp oracle."""
+    out = _run_subprocess("""
+        import jax, jax.numpy as jnp
+        from repro.core import attention_parallel
+        from repro.kernels import ref
+        from repro.launch.mesh import make_test_mesh
+        mesh = make_test_mesh((2, 4), ("data", "model"))
+        B, Hkv, G, hd, bs, nb = 4, 4, 2, 32, 8, 4
+        NB = B * nb + 3
+        ks = jax.random.split(jax.random.PRNGKey(0), 4)
+        q = jax.random.normal(ks[0], (B, Hkv * G, hd))
+        kp = jax.random.normal(ks[1], (Hkv, NB, bs, hd))
+        vp = jax.random.normal(ks[2], (Hkv, NB, bs, hd))
+        bt = jax.random.permutation(ks[3], NB)[:B * nb]
+        bt = bt.reshape(B, nb).astype(jnp.int32)
+        clen = jnp.array([32, 7, 20, 15], jnp.int32)
+        want = ref.paged_decode_attention_ref(
+            q.reshape(B, Hkv, G, hd), kp, vp, bt, clen
+            ).reshape(B, Hkv * G, hd)
+        o1 = attention_parallel.head_parallel_paged_decode_attention(
+            mesh, "model", q, kp, vp, bt, clen)
+        o2 = attention_parallel.request_parallel_paged_decode_attention(
+            mesh, "data", q, kp, vp, bt, clen)
+        for name, out in (("head", o1), ("request", o2)):
+            err = float(jnp.max(jnp.abs(out - want)))
+            assert err < 1e-4, (name, err)
+        print("PAGED_PARALLEL_OK")
+    """)
+    assert "PAGED_PARALLEL_OK" in out
+
+
 def test_sharded_train_step_runs_on_fake_mesh():
     """Actually EXECUTE a sharded train step of a reduced llama on a (2,4)
     mesh — values, not just lowering."""
@@ -127,11 +163,9 @@ def test_dryrun_entry_small_mesh():
         from repro.launch import dryrun
         import repro.launch.mesh as mesh_mod
         mesh_mod.make_production_mesh = \
-            lambda multi_pod=False: jax.make_mesh(
+            lambda multi_pod=False: mesh_mod.make_test_mesh(
                 (2, 2, 2) if multi_pod else (2, 4),
-                ("pod", "data", "model") if multi_pod else ("data", "model"),
-                axis_types=(jax.sharding.AxisType.Auto,) * (3 if multi_pod
-                                                            else 2))
+                ("pod", "data", "model") if multi_pod else ("data", "model"))
         # reload the symbol inside dryrun
         dryrun.run_one.__globals__  # no-op
         import tempfile
