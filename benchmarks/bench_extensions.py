@@ -11,7 +11,7 @@ from repro.core import costmodel as cm
 from repro.serving.moe_offload import min_bandwidth_moe, transfer_bytes_moe
 
 
-def run():
+def run(quick: bool = False):
     rows = []
     h100, h20 = cm.HARDWARE["h100"], cm.HARDWARE["h20"]
 
@@ -58,7 +58,7 @@ def run():
 
     # measured: sink-attention decode kernel at CPU scale
     from repro.kernels import ops
-    B, S, Hkv, G, hd = 2, 2048, 2, 4, 64
+    B, S, Hkv, G, hd = 2, 256 if quick else 2048, 2, 4, 64
     key = jax.random.PRNGKey(0)
     q = jax.random.normal(key, (B, Hkv * G, hd))
     kc = jax.random.normal(key, (B, Hkv, S, hd))
@@ -82,10 +82,11 @@ def run():
     dp = transformer.init_params(jax.random.PRNGKey(7), dc)
     # random-init draft = worst case (0 acceptance); draft==target = best
     # case (k+1 tokens per target call). Real deployments sit in between.
-    for label, d_par, d_cfg in (("random_draft", dp, dc),
-                                ("oracle_draft", tp, tc)):
+    draft_cases = (("oracle_draft", tp, tc),) if quick else (
+        ("random_draft", dp, dc), ("oracle_draft", tp, tc))
+    for label, d_par, d_cfg in draft_cases:
         _, st = speculative_generate(tp, tc, d_par, d_cfg, [1, 2, 3, 4],
-                                     16, k=4)
+                                     8 if quick else 16, k=4)
         rows.append({
             "name": f"ext_specdecode_{label}_k4",
             "us_per_call": 0,

@@ -25,7 +25,7 @@ CONFIGS = {
 }
 
 
-def run():
+def run(quick: bool = False):
     rows = []
     h100, h20 = cm.HARDWARE["h100"], cm.HARDWARE["h20"]
     for model_name, hw in CONFIGS.items():
@@ -50,7 +50,9 @@ def run():
     # measured CPU-scale engines on one trace
     cfg = registry.get_smoke_config("llama3-8b")
     params = transformer.init_params(jax.random.PRNGKey(0), cfg)
-    for trace_name in ("azure-conv", "azure-code"):
+    n_reqs = 3 if quick else 12
+    for trace_name in ("azure-conv",) if quick else ("azure-conv",
+                                                     "azure-code"):
         res = {}
         for engine_name, ctor in (
                 ("vllm", lambda: Engine(cfg, params, max_batch=8,
@@ -58,7 +60,7 @@ def run():
                 ("lamina", lambda: DisaggEngine(cfg, params, max_batch=8,
                                                 num_blocks=256,
                                                 n_attention_workers=2))):
-            reqs = traces.generate(trace_name, 12, cfg.vocab_size,
+            reqs = traces.generate(trace_name, n_reqs, cfg.vocab_size,
                                    scale=0.01, seed=0)
             eng = ctor()
             eng.submit(reqs)

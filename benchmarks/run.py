@@ -1,12 +1,18 @@
 """Benchmark harness entry point — one module per paper table/figure.
 Prints ``name,us_per_call,derived`` CSV (deliverable d).
 
-  PYTHONPATH=src python -m benchmarks.run [--only fig10]
+  PYTHONPATH=src python -m benchmarks.run [--only fig10] [--quick]
+
+``--quick`` runs every registered benchmark at tiny shapes (modules whose
+run() accepts a `quick` kwarg shrink their sweeps; the rest are already
+cheap) — the CI bit-rot guard tests/test_benchmarks.py invokes it, so a
+benchmark that stops importing or running fails tier-1.
 """
 from __future__ import annotations
 
 import argparse
 import importlib
+import inspect
 import sys
 import time
 
@@ -22,14 +28,17 @@ MODULES = [
     ("sec43_pipelining", "benchmarks.bench_pipeline"),
     ("kernels_micro", "benchmarks.bench_kernels"),
     ("paged_attention", "benchmarks.bench_paged_attention"),
+    ("block_sharded_attention", "benchmarks.bench_block_sharding"),
     ("sec7_extensions", "benchmarks.bench_extensions"),
 ]
 
 
-def main() -> None:
+def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="")
-    args = ap.parse_args()
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny shapes for every benchmark (CI bit-rot guard)")
+    args = ap.parse_args(argv)
     print("name,us_per_call,derived")
     failures = 0
     for label, module_name in MODULES:
@@ -38,7 +47,11 @@ def main() -> None:
         t0 = time.time()
         try:
             mod = importlib.import_module(module_name)
-            rows = mod.run()
+            kw = {}
+            if args.quick and \
+                    "quick" in inspect.signature(mod.run).parameters:
+                kw["quick"] = True
+            rows = mod.run(**kw)
             for r in rows:
                 print(f"{r['name']},{r['us_per_call']},\"{r['derived']}\"")
             print(f"# {label}: {len(rows)} rows in {time.time()-t0:.1f}s",

@@ -2,18 +2,31 @@
 
 The paper distributes decode attention over a pool of memory devices either
 request-level (imbalanced) or head-level (balanced, chosen by Lamina). On the
-TPU mesh we express both, plus the sequence-level split that the §4.2.2
-combine identity makes exact — the variant that serves `long_500k` where a
-single request's KV exceeds one chip:
+TPU mesh we express both, plus the split the §4.2.2 combine identity makes
+exact — the variant that serves `long_500k` where a single request's KV
+exceeds one chip. Three PAGED partitions of the serving engines' block pool:
 
-  * head-level:    KV cache heads sharded over the pool axis, no combine
-  * sequence-level: KV cache sequence sharded, partial triple + psum-combine
-  * request-level: batch sharded (the paper's rejected baseline, kept for the
-                    load-imbalance benchmark)
+  * head-level:    pool head axis sharded; each device owns its heads'
+                   blocks wholesale; no combine (heads are independent)
+  * block-level:   pool BLOCK axis sharded; a sequence's round-robin-placed
+                   blocks span every device; each device computes the §4.2.2
+                   partial (a, s, m) over its local blocks and psum_combine
+                   merges — only the tiny triple crosses chips, never KV
+  * request-level: batch/table sharded, pool replicated (the paper's
+                   rejected baseline, kept for the load-imbalance benchmark)
 
-All are written with ``shard_map`` so the per-layer boundary communication is
-explicit — these collectives are the TPU rendering of the paper's per-layer
-DCN transfers, and the dry-run's collective roofline term measures them.
+NO-DENSIFY INVARIANT: every paged backend attends over the pool *in place*
+through its (local) block table — the Pallas paged flash-decode kernel on
+TPU, its head-major jnp reference on CPU. No backend gathers the pool into a
+dense seq-major (B, S, Hkv, hd) slab; per-device KV traffic is exactly one
+pass over that device's live blocks (Adrenaline, arXiv:2503.20552, makes the
+same single-pass argument for attention-disaggregated throughput).
+
+Dense-slab variants (seq/head/request over contiguous caches) survive below
+for the non-paged kernel sweeps. All are written with ``shard_map`` so the
+per-layer boundary communication is explicit — these collectives are the TPU
+rendering of the paper's per-layer DCN transfers, and the dry-run's
+collective roofline term measures them.
 """
 from __future__ import annotations
 
@@ -30,6 +43,16 @@ except AttributeError:  # pragma: no cover — older jax in the container
     from jax.experimental.shard_map import shard_map as _shard_map
 
 from repro.core import combine as C
+
+
+def _shard_map_norep(fn, **kw):
+    """shard_map without the replication checker: pallas_call has no
+    replication rule, and the paged backends may run the kernel in-shard.
+    jax >= 0.7 renamed check_rep to check_vma."""
+    try:
+        return _shard_map(fn, check_rep=False, **kw)
+    except TypeError:  # pragma: no cover — newer jax
+        return _shard_map(fn, check_vma=False, **kw)
 
 
 def _masked_partial(q, k_cache, v_cache, valid, logit_softcap=0.0):
@@ -128,53 +151,63 @@ def head_parallel_decode_attention(mesh: Mesh, axis: str, q, k_cache, v_cache,
 # ---------------------------------------------------------------------------
 # Paged variants: the pool-native backends. The KV operand is the serving
 # engines' block pool (Hkv, num_blocks, block_size, hd) + a (B, nb) block
-# table — what the paged flash-decode kernel consumes in place. Head-level
-# shards the pool's head axis (each device owns its heads' blocks wholesale);
-# request-level shards the table/batch and replicates the pool. Sharding by
-# blocks rather than dense slabs is the layout the cross-chip sequence
-# partition will split on (ROADMAP follow-on).
+# table — what the paged flash-decode kernel consumes IN PLACE, in-shard.
+# Head-level shards the pool's head axis (each device owns its heads' blocks
+# wholesale); block-level shards the pool's BLOCK axis (a sequence spans
+# devices, partials psum-combined); request-level shards the table/batch and
+# replicates the pool. See the module docstring's no-densify invariant.
 # ---------------------------------------------------------------------------
-def _paged_dense_view(k_pool, v_pool, block_tables):
-    """(Hkv, NB, bs, hd) pools + (B, nb) table -> seq-major dense
-    (B, nb·bs, Hkv, hd) views for ``_masked_partial``."""
-    Hkv, _, bs, hd = k_pool.shape
-    B, nb = block_tables.shape
-    kc = jnp.transpose(k_pool[:, block_tables], (1, 2, 3, 0, 4)).reshape(
-        B, nb * bs, Hkv, hd)
-    vc = jnp.transpose(v_pool[:, block_tables], (1, 2, 3, 0, 4)).reshape(
-        B, nb * bs, Hkv, hd)
-    return kc, vc
+def _paged_shard_attend(q, kp, vp, bt, clen, *, sliding_window: int,
+                        attention_sinks: int, logit_softcap: float,
+                        backend: str, interpret: bool):
+    """Finalized paged attention over one device's pool slice, in place.
+
+    q: (B, H_local, hd); kp/vp: (Hkv_local, NB, bs, hd); bt: (B, nb);
+    clen: (B,). 'pallas' runs the paged flash-decode kernel; 'jnp' its
+    head-major gather reference (the CPU data path)."""
+    from repro.kernels.paged_decode_attention import (paged_decode_attention,
+                                                     paged_decode_attention_jnp)
+
+    B, H, hd = q.shape
+    Hkv = kp.shape[0]
+    qg = q.reshape(B, Hkv, H // Hkv, hd)
+    fn = paged_decode_attention_jnp if backend == "jnp" else functools.partial(
+        paged_decode_attention, interpret=interpret)
+    out = fn(qg, kp, vp, bt, clen, sliding_window=sliding_window,
+             attention_sinks=attention_sinks, logit_softcap=logit_softcap)
+    return out.reshape(B, H, hd).astype(q.dtype)
 
 
 def head_parallel_paged_decode_attention(mesh: Mesh, axis: str, q, k_pool,
                                          v_pool, block_tables, cache_len, *,
                                          sliding_window: int = 0,
+                                         attention_sinks: int = 0,
                                          logit_softcap: float = 0.0,
-                                         batch_axis: Optional[str] = None):
+                                         batch_axis: Optional[str] = None,
+                                         backend: str = "jnp",
+                                         interpret: bool = False):
     """Head-level split over the paged pool: each device owns Hkv/n heads of
     every pool block (pool head axis sharded over `axis`); the block table
-    and lengths are replicated scalars. No combine needed — heads are
-    independent. Requires Hkv % mesh.shape[axis] == 0 (paper §5)."""
+    and lengths are replicated scalars. Each device runs the paged kernel
+    (or its jnp reference) over its head slice in place — no dense view, no
+    combine (heads are independent). Requires Hkv % mesh.shape[axis] == 0
+    (paper §5)."""
     Hkv = k_pool.shape[0]
     n = mesh.shape[axis]
     if Hkv % n:
         raise ValueError(
             f"head-level partitioning needs kv_heads ({Hkv}) divisible by "
-            f"pool size ({n}) — paper §5; use seq-level instead")
+            f"pool size ({n}) — paper §5; use block-level instead")
     bspec = P(batch_axis) if batch_axis else P()
     btspec = P(batch_axis, None) if batch_axis else P()
+    kw = dict(sliding_window=sliding_window, attention_sinks=attention_sinks,
+              logit_softcap=logit_softcap, backend=backend,
+              interpret=interpret)
 
     def shard_fn(q, kp, vp, bt, clen):
-        kc, vc = _paged_dense_view(kp, vp, bt)
-        S = kc.shape[1]
-        pos = jnp.arange(S)[None, :]
-        valid = pos < clen[:, None]
-        if sliding_window > 0:
-            valid &= pos >= (clen[:, None] - sliding_window)
-        part = _masked_partial(q, kc, vc, valid, logit_softcap)
-        return C.finalize(part).astype(q.dtype)
+        return _paged_shard_attend(q, kp, vp, bt, clen, **kw)
 
-    return _shard_map(
+    return _shard_map_norep(
         shard_fn, mesh=mesh,
         in_specs=(P(batch_axis, axis, None), P(axis, None, None, None),
                   P(axis, None, None, None), btspec, bspec),
@@ -185,26 +218,82 @@ def head_parallel_paged_decode_attention(mesh: Mesh, axis: str, q, k_pool,
 def request_parallel_paged_decode_attention(mesh: Mesh, axis: str, q, k_pool,
                                             v_pool, block_tables, cache_len,
                                             *, sliding_window: int = 0,
-                                            logit_softcap: float = 0.0):
+                                            attention_sinks: int = 0,
+                                            logit_softcap: float = 0.0,
+                                            backend: str = "jnp",
+                                            interpret: bool = False):
     """Request-level split over the paged pool: the batch (q, block table,
     lengths) is sharded; the pool is replicated — each device walks only its
-    requests' tables (the paper's load-imbalance baseline, pool-native)."""
-    def shard_fn(q, kp, vp, bt, clen):
-        kc, vc = _paged_dense_view(kp, vp, bt)
-        S = kc.shape[1]
-        pos = jnp.arange(S)[None, :]
-        valid = pos < clen[:, None]
-        if sliding_window > 0:
-            valid &= pos >= (clen[:, None] - sliding_window)
-        return C.finalize(_masked_partial(q, kc, vc, valid,
-                                          logit_softcap)).astype(q.dtype)
+    requests' tables through the paged kernel (or its jnp reference), in
+    place (the paper's load-imbalance baseline, pool-native)."""
+    kw = dict(sliding_window=sliding_window, attention_sinks=attention_sinks,
+              logit_softcap=logit_softcap, backend=backend,
+              interpret=interpret)
 
-    return _shard_map(
+    def shard_fn(q, kp, vp, bt, clen):
+        return _paged_shard_attend(q, kp, vp, bt, clen, **kw)
+
+    return _shard_map_norep(
         shard_fn, mesh=mesh,
         in_specs=(P(axis, None, None), P(None, None, None, None),
                   P(None, None, None, None), P(axis, None), P(axis)),
         out_specs=P(axis, None, None),
     )(q, k_pool, v_pool, block_tables, cache_len)
+
+
+def block_parallel_paged_decode_attention(mesh: Mesh, axis: str, q, k_pool,
+                                          v_pool, shard_tables,
+                                          shard_positions, cache_len, *,
+                                          sliding_window: int = 0,
+                                          attention_sinks: int = 0,
+                                          logit_softcap: float = 0.0,
+                                          backend: str = "jnp",
+                                          interpret: bool = False):
+    """Block-level split: ONE sequence's KV spans every pool device.
+
+    The pool's block axis is sharded over `axis` (device s holds global
+    blocks [s·npb, (s+1)·npb) — the PagedKVCache shard layout); q and
+    cache_len are replicated. shard_tables/shard_positions (n, B, nbl) carry
+    each device's LOCAL table + the global base position of every slot
+    (``PagedKVCache.block_table_shards``) — positions, not slot indices,
+    anchor the causal/window/sink masks because a shard's walk is
+    non-contiguous in the sequence. Each device computes the §4.2.2 partial
+    (a, s, m) over exactly one pass of its local live blocks — the paged
+    kernel with return_partials=True, or the positions-aware jnp reference —
+    and ``psum_combine`` merges exactly; only the tiny triple crosses chips,
+    never KV. A device with zero live blocks for a sequence contributes the
+    empty partial (s = 0, m = -inf), the combine identity."""
+    kernel_partials = backend != "jnp"
+
+    def shard_fn(q, kp, vp, bt, bp, clen):
+        from repro.kernels.ops import _triple_to_partial
+        from repro.kernels.paged_decode_attention import paged_decode_attention
+        from repro.models.attention import \
+            paged_decode_attention_partial_pos_jnp
+
+        bt, bp = bt[0], bp[0]
+        B, H, hd = q.shape
+        if kernel_partials:
+            Hkv = kp.shape[0]
+            o, l, m = paged_decode_attention(
+                q.reshape(B, Hkv, H // Hkv, hd), kp, vp, bt, clen,
+                block_positions=bp, sliding_window=sliding_window,
+                attention_sinks=attention_sinks, logit_softcap=logit_softcap,
+                interpret=interpret, return_partials=True)
+            part = _triple_to_partial(o, l, m, B, H, hd)
+        else:
+            part = paged_decode_attention_partial_pos_jnp(
+                q, kp, vp, bt, bp, clen, window_total=clen,
+                sliding_window=sliding_window,
+                attention_sinks=attention_sinks, logit_softcap=logit_softcap)
+        return C.finalize(C.psum_combine(part, axis)).astype(q.dtype)
+
+    return _shard_map_norep(
+        shard_fn, mesh=mesh,
+        in_specs=(P(), P(None, axis, None, None), P(None, axis, None, None),
+                  P(axis, None, None), P(axis, None, None), P()),
+        out_specs=P(),
+    )(q, k_pool, v_pool, shard_tables, shard_positions, cache_len)
 
 
 # ---------------------------------------------------------------------------
@@ -223,7 +312,7 @@ def request_parallel_decode_attention(mesh: Mesh, axis: str, q, k_cache,
         return C.finalize(_masked_partial(q, kc, vc, valid,
                                           logit_softcap)).astype(q.dtype)
 
-    return _shard_map(
+    return _shard_map_norep(
         shard_fn, mesh=mesh,
         in_specs=(P(axis, None, None), P(axis, None, None, None),
                   P(axis, None, None, None), P(axis)),

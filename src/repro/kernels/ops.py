@@ -44,26 +44,45 @@ def ssm_scan(x, B_in, C_in, decay, *, chunk: int = 128):
 
 
 # --- register the Pallas decode backend with the model layer --------------
+def _serving_window(sliding_window: int, attention_sinks: int, cache_len):
+    """Map the model-layer window contract (anchored to total length
+    cache_len + 1 — the incoming token counts) onto the kernels' (anchored
+    to cache_len): the kernel window shrinks by one. sliding_window == 1
+    covers ONLY the incoming token, which the kernels cannot express as a
+    window (0 means "no window"), so the stored prefix is clamped to the
+    always-attendable sinks instead. Returns (kernel_sw, kernel_sinks,
+    kernel_cache_len)."""
+    if sliding_window == 1:
+        return 0, 0, jnp.minimum(cache_len, attention_sinks)
+    sw = max(sliding_window - 1, 0) if sliding_window > 0 else 0
+    return sw, attention_sinks, cache_len
+
+
+def _triple_to_partial(o, l, m, B, H, hd):
+    from repro.core.combine import Partial
+
+    return Partial(a=o.astype(jnp.float32).reshape(B, H, hd) *
+                   l.reshape(B, H)[..., None],
+                   s=l.reshape(B, H), m=m.reshape(B, H))
+
+
 def _pallas_decode_partial_backend(q, k_cache, v_cache, cache_len, *,
                                    sliding_window: int = 0,
                                    attention_sinks: int = 0,
                                    logit_softcap: float = 0.0):
     """Partial triple over the cached prefix (model-layer backend contract:
     cache_len = stored tokens, window is w.r.t. total length cache_len+1)."""
-    from repro.core.combine import Partial
-
     B, H, hd = q.shape
     Hkv = k_cache.shape[1]  # head-major cache (B, Hkv, S, hd)
     G = H // Hkv
     qg = q.reshape(B, Hkv, G, hd)
-    sw = max(sliding_window - 1, 0) if sliding_window > 0 else 0
+    sw, sinks, clen = _serving_window(sliding_window, attention_sinks,
+                                      cache_len)
     o, l, m = _da.decode_attention(
-        qg, k_cache, v_cache, cache_len, sliding_window=sw,
-        attention_sinks=attention_sinks, logit_softcap=logit_softcap,
+        qg, k_cache, v_cache, clen, sliding_window=sw,
+        attention_sinks=sinks, logit_softcap=logit_softcap,
         interpret=_INTERPRET, return_partials=True)
-    return Partial(a=o.astype(jnp.float32).reshape(B, H, hd) *
-                   l.reshape(B, H)[..., None],
-                   s=l.reshape(B, H), m=m.reshape(B, H))
+    return _triple_to_partial(o, l, m, B, H, hd)
 
 
 def _pallas_paged_decode_partial_backend(q, k_pool, v_pool, block_tables,
@@ -74,20 +93,39 @@ def _pallas_paged_decode_partial_backend(q, k_pool, v_pool, block_tables,
     """Paged partial triple over the block pool (same backend contract as
     the dense variant: cache_len = stored tokens, window w.r.t. total length
     cache_len+1) — the serving engines' TPU hot path."""
-    from repro.core.combine import Partial
-
     B, H, hd = q.shape
     Hkv = k_pool.shape[0]  # head-major pool (Hkv, num_blocks, bs, hd)
     G = H // Hkv
     qg = q.reshape(B, Hkv, G, hd)
-    sw = max(sliding_window - 1, 0) if sliding_window > 0 else 0
+    sw, sinks, clen = _serving_window(sliding_window, attention_sinks,
+                                      cache_len)
     o, l, m = _pda.paged_decode_attention(
-        qg, k_pool, v_pool, block_tables, cache_len, sliding_window=sw,
-        attention_sinks=attention_sinks, logit_softcap=logit_softcap,
+        qg, k_pool, v_pool, block_tables, clen, sliding_window=sw,
+        attention_sinks=sinks, logit_softcap=logit_softcap,
         interpret=_INTERPRET, return_partials=True)
-    return Partial(a=o.astype(jnp.float32).reshape(B, H, hd) *
-                   l.reshape(B, H)[..., None],
-                   s=l.reshape(B, H), m=m.reshape(B, H))
+    return _triple_to_partial(o, l, m, B, H, hd)
+
+
+def pallas_paged_decode_partial_pos(q, k_pool, v_pool, block_tables,
+                                    block_positions, cache_len, *,
+                                    sliding_window: int = 0,
+                                    attention_sinks: int = 0,
+                                    logit_softcap: float = 0.0):
+    """Positions-aware paged partial for BLOCK-SHARDED local tables (same
+    serving contract) — runs the kernel in place over one shard's pool
+    slice; the block-partition AttentionWorkerPool's TPU hot path."""
+    B, H, hd = q.shape
+    Hkv = k_pool.shape[0]
+    G = H // Hkv
+    qg = q.reshape(B, Hkv, G, hd)
+    sw, sinks, clen = _serving_window(sliding_window, attention_sinks,
+                                      cache_len)
+    o, l, m = _pda.paged_decode_attention(
+        qg, k_pool, v_pool, block_tables, clen,
+        block_positions=block_positions, sliding_window=sw,
+        attention_sinks=sinks, logit_softcap=logit_softcap,
+        interpret=_INTERPRET, return_partials=True)
+    return _triple_to_partial(o, l, m, B, H, hd)
 
 
 def register():

@@ -15,6 +15,14 @@ Mechanics:
     operands (``PrefetchScalarGridSpec``) and drive the k/v BlockSpec index
     maps — the grid's KV dimension walks the table, streaming pool blocks
     HBM→VMEM;
+  * ``block_positions (B, nb)`` (optional third prefetch operand) carries
+    each table slot's global base position. For a contiguous table the
+    default ``slot·block_size`` is implied; a BLOCK-SHARDED table (one shard
+    of a cross-chip sequence split, ``core/attention_parallel.py``) walks a
+    non-contiguous subset of the sequence's blocks, and the positions keep
+    causal/window/sink masks exact. Slots a shard does not own carry the
+    ``POS_PAD`` sentinel so every row masks out — the shard then yields the
+    empty partial (l = 0, m = NEG_INF) the §4.2.2 combine treats as identity;
   * per block the kernel computes the partial (acc, denom, max) triple and
     merges it with the running state using the paper-§4.2.2 combine identity
     (``core/combine.py``) — identical math to ``decode_attention.py``, so the
@@ -24,8 +32,9 @@ Mechanics:
     them, and v is zero-filled under the mask so stale pool garbage can never
     poison the accumulator (0·Inf/NaN).
 
-This layout is what a future cross-chip sequence partition shards by: blocks,
-not dense slabs.
+This layout is what the cross-chip block partition shards by: blocks, not
+dense slabs (``block_parallel_paged_decode_attention`` runs this kernel with
+``return_partials=True`` per device and psum-combines the triples).
 """
 from __future__ import annotations
 
@@ -37,9 +46,13 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -1e30
+# Base-position sentinel for table slots a shard does not own (or pure pad):
+# far beyond any real cache_len, so every mask (causal, window, sink) kills
+# the whole block while staying comfortably inside int32.
+POS_PAD = 1 << 30
 
 
-def _paged_decode_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref,
+def _paged_decode_kernel(bt_ref, bp_ref, len_ref, q_ref, k_ref, v_ref,
                          o_ref, lo_ref, mo_ref,
                          acc_ref, m_ref, l_ref, *,
                          block_size: int, sliding_window: int,
@@ -58,7 +71,10 @@ def _paged_decode_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref,
     v = v_ref[0, 0].astype(jnp.float32)
     cache_len = len_ref[b]
 
-    pos = kb * block_size + jax.lax.broadcasted_iota(
+    # global sequence positions of this pool block's rows: the prefetched
+    # per-slot base (slot·block_size for contiguous tables; arbitrary —
+    # including POS_PAD — for block-sharded ones)
+    pos = bp_ref[b, kb] + jax.lax.broadcasted_iota(
         jnp.int32, (1, block_size), 1)[0]        # (block_size,)
     row_valid = pos < cache_len
     if sliding_window > 0:
@@ -100,11 +116,18 @@ def _paged_decode_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref,
         mo_ref[0, 0] = m_ref[...]   # partial max
 
 
+def default_block_positions(B: int, nb: int, block_size: int) -> jax.Array:
+    """Contiguous-table base positions: slot j starts at j·block_size."""
+    return jnp.broadcast_to(
+        jnp.arange(nb, dtype=jnp.int32)[None, :] * block_size, (B, nb))
+
+
 @functools.partial(jax.jit, static_argnames=("sliding_window",
                                              "attention_sinks",
                                              "logit_softcap", "interpret",
                                              "return_partials"))
 def paged_decode_attention(q, k_pool, v_pool, block_tables, cache_len, *,
+                           block_positions=None,
                            sliding_window: int = 0, attention_sinks: int = 0,
                            logit_softcap: float = 0.0,
                            interpret: bool = False,
@@ -112,8 +135,12 @@ def paged_decode_attention(q, k_pool, v_pool, block_tables, cache_len, *,
     """q: (B, Hkv, G, hd); k_pool/v_pool: HEAD-MAJOR
     (Hkv, num_blocks, block_size, hd); block_tables: (B, nb) int32 pool-block
     ids per sequence (pad slots with any valid id — masked); cache_len: (B,)
-    live tokens. Returns (B, Hkv, G, hd), or the (o, l, m) §4.2.2 triple over
-    the cached subset when return_partials — mergeable with other partials.
+    live tokens. block_positions: optional (B, nb) int32 global base position
+    per table slot (defaults to the contiguous slot·block_size; block-sharded
+    callers pass their shard's true positions, POS_PAD on foreign slots).
+    Returns (B, Hkv, G, hd), or the (o, l, m) §4.2.2 triple over the cached
+    subset when return_partials — mergeable with other partials (e.g. across
+    the pool mesh axis via ``core.combine.psum_combine``).
 
     Per-step HBM traffic is exactly the live KV: each (head, block) tile is
     one contiguous (block_size, hd) DMA addressed through the prefetched
@@ -122,27 +149,32 @@ def paged_decode_attention(q, k_pool, v_pool, block_tables, cache_len, *,
     B, Hkv, G, hd = q.shape
     block_size = k_pool.shape[2]
     nb = block_tables.shape[1]
+    if block_positions is None:
+        block_positions = default_block_positions(B, nb, block_size)
+    block_positions = block_positions.astype(jnp.int32)
 
     kernel = functools.partial(
         _paged_decode_kernel, block_size=block_size,
         sliding_window=sliding_window, attention_sinks=attention_sinks,
         logit_softcap=logit_softcap, nb=nb)
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,   # block_tables, cache_len
+        num_scalar_prefetch=3,   # block_tables, block_positions, cache_len
         grid=(B, Hkv, nb),       # kb innermost: scratch carries the combine
         in_specs=[
-            pl.BlockSpec((1, 1, G, hd), lambda b, h, kb, bt, ln: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, G, hd),
+                         lambda b, h, kb, bt, bp, ln: (b, h, 0, 0)),
             pl.BlockSpec((1, 1, block_size, hd),
-                         lambda b, h, kb, bt, ln: (h, bt[b, kb], 0, 0)),
+                         lambda b, h, kb, bt, bp, ln: (h, bt[b, kb], 0, 0)),
             pl.BlockSpec((1, 1, block_size, hd),
-                         lambda b, h, kb, bt, ln: (h, bt[b, kb], 0, 0)),
+                         lambda b, h, kb, bt, bp, ln: (h, bt[b, kb], 0, 0)),
         ],
         out_specs=(
-            pl.BlockSpec((1, 1, G, hd), lambda b, h, kb, bt, ln: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, G, hd),
+                         lambda b, h, kb, bt, bp, ln: (b, h, 0, 0)),
             pl.BlockSpec((1, 1, G, 128),
-                         lambda b, h, kb, bt, ln: (b, h, 0, 0)),
+                         lambda b, h, kb, bt, bp, ln: (b, h, 0, 0)),
             pl.BlockSpec((1, 1, G, 128),
-                         lambda b, h, kb, bt, ln: (b, h, 0, 0)),
+                         lambda b, h, kb, bt, bp, ln: (b, h, 0, 0)),
         ),
         scratch_shapes=[
             pltpu.VMEM((G, hd), jnp.float32),    # acc
@@ -159,7 +191,7 @@ def paged_decode_attention(q, k_pool, v_pool, block_tables, cache_len, *,
             jax.ShapeDtypeStruct((B, Hkv, G, 128), jnp.float32),
         ),
         interpret=interpret,
-    )(block_tables, cache_len, q, k_pool, v_pool)
+    )(block_tables, block_positions, cache_len, q, k_pool, v_pool)
     if return_partials:
         return out, l_out[..., 0], m_out[..., 0]
     return out

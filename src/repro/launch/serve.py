@@ -23,7 +23,7 @@ def main() -> None:
     ap.add_argument("--num-blocks", type=int, default=512)
     ap.add_argument("--attention-workers", type=int, default=2)
     ap.add_argument("--partition", default="head",
-                    choices=["head", "request"])
+                    choices=["head", "block", "request"])
     ap.add_argument("--backend", default="jnp", choices=["jnp", "pallas"])
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
@@ -61,6 +61,8 @@ def main() -> None:
         log = eng.pool.log
         print(f"pool transfers={log.transfers} bytes={log.total} "
               f"(q={log.q_bytes} kv={log.kv_bytes} out={log.out_bytes})")
+        print(f"pool partition={args.partition} per_worker_kv_bytes="
+              f"{eng.pool.per_worker_kv_bytes}")
 
 
 if __name__ == "__main__":

@@ -177,13 +177,21 @@ def decode_attention_partial_jnp(q, k_cache, v_cache, cache_len, *,
                                  sliding_window: int = 0,
                                  attention_sinks: int = 0,
                                  logit_softcap: float = 0.0,
-                                 k_scale=None, v_scale=None):
+                                 k_scale=None, v_scale=None,
+                                 positions=None, window_total=None):
     """Partial attention over the cached prefix.
 
     q: (B, H, hd) (RoPE applied); caches: HEAD-MAJOR (B, Hkv, S, hd);
     cache_len: (B,) = number of tokens stored (the new token is NOT there).
     Window masks are computed w.r.t. total length cache_len + 1.
     Returns core.combine.Partial with fields shaped (B, H, hd)/(B, H).
+
+    positions: optional (B, S) global sequence position per cache slot —
+    block-sharded callers hold a NON-CONTIGUOUS subset of the sequence, so
+    slot index ≠ position (foreign slots carry the POS_PAD sentinel and mask
+    out). window_total: optional (B,) total length the sliding window is
+    anchored to (defaults to cache_len + 1, the serving contract; the
+    shard_map backends anchor to cache_len to match the dense oracle).
 
     §Perf iterations 1+3: the einsums contract the head-major cache in its
     native layout with fp32 accumulation via preferred_element_type — no
@@ -206,10 +214,11 @@ def decode_attention_partial_jnp(q, k_cache, v_cache, cache_len, *,
         s = s * k_scale[:, :, None, :]
     if logit_softcap > 0.0:
         s = logit_softcap * jnp.tanh(s / logit_softcap)
-    pos = jnp.arange(S)[None, :]
+    pos = jnp.arange(S)[None, :] if positions is None else positions
+    total = cache_len + 1 if window_total is None else window_total
     valid = pos < cache_len[:, None]
     if sliding_window > 0:
-        in_window = pos >= (cache_len[:, None] + 1 - sliding_window)
+        in_window = pos >= (total[:, None] - sliding_window)
         if attention_sinks > 0:
             in_window |= pos < attention_sinks
         valid &= in_window
@@ -256,6 +265,53 @@ def paged_decode_attention_partial_jnp(q, k_pool, v_pool, block_tables,
 
 
 register_paged_decode_backend("jnp", paged_decode_attention_partial_jnp)
+
+
+def paged_decode_attention_partial_pos_jnp(q, k_pool, v_pool, block_tables,
+                                           block_positions, cache_len, *,
+                                           window_total=None,
+                                           sliding_window: int = 0,
+                                           attention_sinks: int = 0,
+                                           logit_softcap: float = 0.0):
+    """Positions-aware paged partial for BLOCK-SHARDED tables (jnp path).
+
+    One shard of a cross-chip sequence split holds a non-contiguous subset of
+    the sequence's blocks: block_tables (B, nb) are the shard's LOCAL pool
+    ids and block_positions (B, nb) each slot's global base position (POS_PAD
+    on slots the shard does not own, so they mask out entirely). A shard with
+    zero live blocks yields the empty partial (s = 0, m = -inf) — the §4.2.2
+    combine identity. window_total as in decode_attention_partial_jnp."""
+    from repro.kernels.paged_decode_attention import paged_gather_dense
+
+    B, nb = block_tables.shape
+    bs = k_pool.shape[2]
+    kc, vc = paged_gather_dense(k_pool, v_pool, block_tables)
+    pos = (block_positions[:, :, None] +
+           jnp.arange(bs, dtype=jnp.int32)[None, None, :]).reshape(B, nb * bs)
+    return decode_attention_partial_jnp(
+        q, kc, vc, cache_len, sliding_window=sliding_window,
+        attention_sinks=attention_sinks, logit_softcap=logit_softcap,
+        positions=pos, window_total=window_total)
+
+
+def paged_decode_attention_partial_pos(q, k_pool, v_pool, block_tables,
+                                       block_positions, cache_len, *,
+                                       backend: str = "jnp",
+                                       sliding_window: int = 0,
+                                       attention_sinks: int = 0,
+                                       logit_softcap: float = 0.0):
+    """Backend dispatch for the positions-aware paged partial (serving
+    contract: window anchored to cache_len + 1). 'pallas' streams the
+    shard's pool slice through the paged kernel in place — no gather;
+    'jnp' is the CPU gather reference."""
+    kw = dict(sliding_window=sliding_window, attention_sinks=attention_sinks,
+              logit_softcap=logit_softcap)
+    if backend == "pallas":
+        from repro.kernels import ops
+        return ops.pallas_paged_decode_partial_pos(
+            q, k_pool, v_pool, block_tables, block_positions, cache_len, **kw)
+    return paged_decode_attention_partial_pos_jnp(
+        q, k_pool, v_pool, block_tables, block_positions, cache_len, **kw)
 
 
 def _new_token_partial(q, k_new, v_new, *, logit_softcap: float = 0.0):

@@ -7,8 +7,16 @@ lowerable on the TPU mesh:
     o-proj/FFN) — the slice boundaries are exactly the min-cut the
     converter finds (context = the residual stream);
   * an AttentionWorkerPool owns the attention computation, partitioned
-    head-level across the DOP's `b` workers (paper §5, Fig. 9) with
-    request-level as the load-imbalance baseline;
+    across the DOP's `b` workers (paper §5, Fig. 9) one of three ways:
+    "head" (each worker owns Hkv/n heads of every pool block — Lamina's
+    choice), "block" (the pool's block axis is sharded and a single
+    sequence's round-robin-placed blocks span every worker; per-worker
+    §4.2.2 partials merge exactly via the combine identity — the partition
+    that serves `long_500k` where one request's KV exceeds one chip), or
+    "request" (batch-sharded, the load-imbalance baseline). NO partition
+    ever materialises a dense seq-major KV view — each worker reads its own
+    slice of the block pool in place (the no-densify invariant,
+    core/attention_parallel.py);
   * every per-layer transfer (send-Q, send-KV, recv-output) is accounted in
     bytes — tests assert the per-iteration total equals the paper's
     (2 + 2/G)·e·d·B·L formula (§3.1);
@@ -69,6 +77,8 @@ class AttentionWorkerPool:
         self.backend = backend
         self.log = TransferLog()
         self.per_worker_kv_bytes = [0] * n_workers
+        if partition not in ("head", "request", "block"):
+            raise ValueError(f"unknown partition {partition!r}")
         if partition == "head" and cfg.num_kv_heads % n_workers:
             raise ValueError(
                 f"head partition needs kv_heads ({cfg.num_kv_heads}) "
@@ -141,24 +151,40 @@ class AttentionWorkerPool:
 
     def attend_paged(self, q, k_pool, v_pool, block_tables, cache_len,
                      k_new, v_new, *, sliding_window: int = 0,
-                     logit_softcap: float = 0.0) -> jax.Array:
+                     attention_sinks: int = 0,
+                     logit_softcap: float = 0.0,
+                     shard_tables=None, shard_positions=None) -> jax.Array:
         """Paged variant of :meth:`attend` — the engine's decode hot path.
 
         q: (B, H, hd); k_pool/v_pool: one layer's HEAD-MAJOR pool slice
         (Hkv, num_blocks, block_size, hd) holding the STORED prefix;
         block_tables (B, nb); k_new/v_new (B, Hkv, hd) arrive over the wire.
         Each worker reads its partition of the pool *in place* (head-sliced
-        pool, or request-sliced table) and computes
-        combine(pool partial, new partial) — §4.2.2 across workers too.
-        Per-worker bytes are the allocated table footprint (static shapes;
-        live-token balance is what the head/request benchmark measures)."""
-        from repro.models.attention import paged_decode_attention_combine
+        pool, block-sliced pool, or request-sliced table) and the per-worker
+        partials merge with the new token via §4.2.2.
+
+        Block partition: shard_tables/shard_positions (n, B, nbl) are the
+        COMPACTED per-worker local tables (PagedKVCache.block_table_shards)
+        — each worker walks only its ~1/n of the sequence's blocks, the
+        whole point of the split. When absent (direct callers without the
+        cache at hand) an owner-masked view of the global table is derived
+        in-trace instead: equally exact, but every worker then walks all nb
+        slots, reading ~n× the live KV.
+
+        No per-worker byte accounting happens here — this method runs
+        inside the engine's jitted step, where python side effects fire at
+        trace time only; the engine logs live-token bytes host-side per
+        iteration via :meth:`log_paged_kv`."""
+        from repro.core import combine as C
+        from repro.models.attention import (_new_token_partial,
+                                            paged_decode_attention_combine,
+                                            paged_decode_attention_partial_pos)
 
         B, H, hd = q.shape
-        Hkv, _, bs, _ = k_pool.shape
-        S_alloc = block_tables.shape[1] * bs
-        kw = dict(sliding_window=sliding_window, logit_softcap=logit_softcap,
-                  backend=self.backend)
+        Hkv, NB, bs, _ = k_pool.shape
+        kw = dict(sliding_window=sliding_window,
+                  attention_sinks=attention_sinks,
+                  logit_softcap=logit_softcap)
         if self.partition == "head":
             hk = Hkv // self.n
             g = H // Hkv
@@ -168,11 +194,44 @@ class AttentionWorkerPool:
                 qs = q.reshape(B, Hkv, g, hd)[:, sl].reshape(B, hk * g, hd)
                 o = paged_decode_attention_combine(
                     qs, k_pool[sl], v_pool[sl], block_tables, cache_len,
-                    k_new[:, sl], v_new[:, sl], **kw)
+                    k_new[:, sl], v_new[:, sl], backend=self.backend, **kw)
                 outs.append(o.reshape(B, hk, g, hd))
-                self.per_worker_kv_bytes[wid] += \
-                    2 * B * hk * S_alloc * hd * BYTES
             out = jnp.concatenate(outs, axis=1).reshape(B, H, hd)
+        elif self.partition == "block":
+            # the pool's block axis is cut into n contiguous shard slices
+            # (PagedKVCache round-robins a sequence's blocks across them);
+            # each worker computes the §4.2.2 partial over ITS live blocks
+            # only — derived in-trace from the global table by masking the
+            # slots it does not own (POS_PAD positions kill every row), so
+            # the jitted step needs no per-shard host tables
+            from repro.serving.kvcache import POS_PAD
+
+            if NB % self.n:
+                raise ValueError(
+                    f"block partition needs num_blocks ({NB}) divisible by "
+                    f"workers ({self.n}) — PagedKVCache(n_shards=...)")
+            npb = NB // self.n
+            if shard_tables is None:
+                # fallback: owner-mask the global table in-trace (full walk)
+                nb = block_tables.shape[1]
+                base = jnp.arange(nb, dtype=jnp.int32)[None, :] * bs
+                owner = block_tables // npb
+                local = block_tables % npb
+                per_worker = [(local, jnp.where(owner == wid, base, POS_PAD))
+                              for wid in range(self.n)]
+            else:
+                per_worker = [(shard_tables[wid], shard_positions[wid])
+                              for wid in range(self.n)]
+            partials = []
+            for wid, (bt_w, pos_w) in enumerate(per_worker):
+                partials.append(paged_decode_attention_partial_pos(
+                    q, k_pool[:, wid * npb:(wid + 1) * npb],
+                    v_pool[:, wid * npb:(wid + 1) * npb],
+                    bt_w, pos_w, cache_len, backend=self.backend, **kw))
+            p_new = _new_token_partial(q, k_new, v_new,
+                                       logit_softcap=logit_softcap)
+            out = C.finalize(C.combine(C.combine_many(partials),
+                                       p_new)).astype(q.dtype)
         elif self.partition == "request":
             splits = jnp.array_split(jnp.arange(B), self.n)
             outs = []
@@ -181,20 +240,35 @@ class AttentionWorkerPool:
                     continue
                 o = paged_decode_attention_combine(
                     q[idx], k_pool, v_pool, block_tables[idx],
-                    cache_len[idx], k_new[idx], v_new[idx], **kw)
+                    cache_len[idx], k_new[idx], v_new[idx],
+                    backend=self.backend, **kw)
                 outs.append(o)
-                self.per_worker_kv_bytes[wid] += \
-                    2 * len(idx) * Hkv * S_alloc * hd * BYTES
             out = jnp.concatenate(outs, axis=0)
         else:
             raise ValueError(self.partition)
         return out
 
+    def log_paged_kv(self, worker_tokens, n_layers: int,
+                     kv_head_fraction: float = 1.0) -> None:
+        """Per-worker live-token KV-read accounting for the paged hot path.
+
+        worker_tokens: (n_workers,) live tokens each worker's partition
+        reads this iteration (data-dependent, so logged host-side — see
+        DisaggEngine._decode_iteration, which derives them per partition);
+        kv_head_fraction scales for head partitioning (each worker reads
+        only Hkv/n heads of every token)."""
+        hd = self.cfg.resolved_head_dim
+        per_tok = 2 * self.cfg.num_kv_heads * kv_head_fraction * hd * \
+            BYTES * n_layers
+        for wid in range(self.n):
+            self.per_worker_kv_bytes[wid] += int(worker_tokens[wid] * per_tok)
+
     # overlap mode shares the same math (combine is exact); the distinction
     # is the *schedule* — prev-partial issues right after send-Q, the new
     # token merges after send-KV — which the latency model in
-    # benchmarks/bench_overlap.py prices. Alias kept for clarity.
-    attend_overlapped = attend
+    # benchmarks/bench_overlap.py prices. The engine's hot path is PAGED, so
+    # overlap shares the paged path (not the dense test-oracle one).
+    attend_overlapped = attend_paged
 
 
 def expected_transfer_bytes(cfg: ModelConfig, batch: int) -> int:
@@ -208,15 +282,40 @@ class DisaggEngine(Engine):
 
     def __init__(self, cfg: ModelConfig, params, *, n_attention_workers=2,
                  partition: str = "head", overlap: bool = True, **kw):
+        if partition == "block":
+            # the pool's block axis is sharded over the workers: the cache
+            # must place blocks round-robin across exactly that many shards
+            kw.setdefault("kv_shards", n_attention_workers)
+            if kw["kv_shards"] != n_attention_workers:
+                raise ValueError(
+                    f"block partition shards the pool over the workers: "
+                    f"kv_shards ({kw['kv_shards']}) must equal "
+                    f"n_attention_workers ({n_attention_workers})")
         super().__init__(cfg, params, **kw)
         self.pool = AttentionWorkerPool(cfg, n_attention_workers, partition,
                                         kw.get("decode_backend", "jnp"))
         self.overlap = overlap
+        self._pending_shard_args = None  # block partition, per iteration
         self._decode_jit = jax.jit(self._disagg_decode)
+
+    def _decode_extra_args(self, ids) -> tuple:
+        """Block partition: ride the COMPACTED per-shard local tables +
+        positions into the jitted step so each worker walks only its own
+        ~1/n of the live blocks (block_table_shards). Normally stashed by
+        _decode_iteration (which also consumes the live-token counts for
+        accounting — one table walk, not two); computed fresh for callers
+        that bypass it (MoEOffloadEngine's iteration)."""
+        if self.pool.partition != "block":
+            return ()
+        args, self._pending_shard_args = self._pending_shard_args, None
+        if args is None:
+            lt, lp, _ = self.kv.block_table_shards(ids)
+            args = (jnp.asarray(lt), jnp.asarray(lp))
+        return args
 
     # ----- the sliced decode step (converter output, executed) -----
     def _disagg_decode(self, params, tokens, k_pool, v_pool, block_tables,
-                       lens):
+                       lens, shard_tables=None, shard_positions=None):
         cfg = self.cfg
         cur_len = lens  # stored tokens
         x = jnp.take(params["embed"], tokens[:, None], axis=0)
@@ -238,7 +337,9 @@ class DisaggEngine(Engine):
             attn = self.pool.attend_paged(
                 q[:, 0], k_pool[layer], v_pool[layer], block_tables, cur_len,
                 k[:, 0], v[:, 0], sliding_window=int(window),
-                logit_softcap=cfg.attn_logit_softcap)
+                attention_sinks=cfg.attention_sinks if window else 0,
+                logit_softcap=cfg.attn_logit_softcap,
+                shard_tables=shard_tables, shard_positions=shard_positions)
             # ---- model slice 1: o-proj + residual + FFN ----
             attn_out = out_project(p["attn"], attn[:, None])
             if cfg.post_norms:
@@ -259,11 +360,33 @@ class DisaggEngine(Engine):
         return logits, updates
 
     def _decode_iteration(self) -> None:
+        import numpy as np
+
         from repro.serving.request import State
-        n = len([r for r in self.sched.running if r.state == State.RUNNING])
+        running = [r for r in self.sched.running if r.state == State.RUNNING]
+        if running:
+            # per-worker live-token KV-read accounting (data-dependent, so
+            # host-side: the jitted step's python body fires at trace only)
+            ids = [r.rid for r in running]
+            L = self.cfg.num_layers
+            if self.pool.partition == "block":
+                # one table walk serves both the jitted step's compacted
+                # shard tables and the live-token accounting
+                lt, lp, shard_tokens = self.kv.block_table_shards(ids)
+                self._pending_shard_args = (jnp.asarray(lt), jnp.asarray(lp))
+                self.pool.log_paged_kv(shard_tokens.sum(axis=1), L)
+            elif self.pool.partition == "head":
+                total = sum(self.kv.lengths[i] for i in ids)
+                self.pool.log_paged_kv([total] * self.pool.n, L,
+                                       kv_head_fraction=1.0 / self.pool.n)
+            else:  # request: each worker walks only its requests' tables
+                toks = [sum(self.kv.lengths[ids[i]] for i in idx)
+                        for idx in np.array_split(np.arange(len(ids)),
+                                                  self.pool.n)]
+                self.pool.log_paged_kv(toks, L)
         super()._decode_iteration()
-        if n:
-            self.pool.log_iteration(n)
+        if running:
+            self.pool.log_iteration(len(running))
 
     # ------------------------------------------------------------------
     # Fault tolerance (paper §5): all request state (KV) lives on the

@@ -55,13 +55,17 @@ class Engine:
 
     def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 8,
                  num_blocks: int = 256, block_size: int = 16,
-                 decode_backend: str = "jnp", seed: int = 0):
+                 kv_shards: int = 1, decode_backend: str = "jnp",
+                 seed: int = 0):
         if cfg.family not in ("dense", "moe", "vlm"):
             raise ValueError("engine serves KV-cache architectures; "
                              f"got family={cfg.family}")
         self.cfg = cfg
         self.params = params
-        self.kv = PagedKVCache(cfg, num_blocks, block_size)
+        # kv_shards > 1 places blocks round-robin over that many pool shards
+        # (the DisaggEngine block partition / cross-chip block sharding)
+        self.kv = PagedKVCache(cfg, num_blocks, block_size,
+                               n_shards=kv_shards)
         self.sched = Scheduler(self.kv, max_batch)
         self.backend = decode_backend
         self.key = jax.random.PRNGKey(seed)
@@ -100,7 +104,8 @@ class Engine:
         t0 = time.time()
         logits, updates = self._decode_jit(
             self.params, tokens, self.kv.k_pool, self.kv.v_pool,
-            jnp.asarray(tables), jnp.asarray(lens))
+            jnp.asarray(tables), jnp.asarray(lens),
+            *self._decode_extra_args(ids))
         logits.block_until_ready()
         dt = time.time() - t0
         # placement is the memory pool's job: append the input token's K/V
@@ -121,6 +126,12 @@ class Engine:
         self.stats.tokens_generated += len(running)
         self.stats.batch_sizes.append(len(running))
         self.stats.step_times.append(dt)
+
+    def _decode_extra_args(self, ids) -> tuple:
+        """Hook: extra per-iteration operands for the jitted decode step
+        (the DisaggEngine block partition rides its per-shard local tables
+        through here)."""
+        return ()
 
     def step(self) -> None:
         for req in self.sched.admit():

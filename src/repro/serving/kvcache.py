@@ -11,11 +11,23 @@ the hot path: attention reads the pool through the table, and the new
 token's K/V lands with one batched ``write_tokens`` scatter. ``gather()``
 survives only as the dense test oracle.
 
+Cross-chip block sharding (``n_shards > 1``): the pool's block axis is cut
+into `n_shards` contiguous ranges of ``num_blocks // n_shards`` blocks —
+shard s owns global ids [s·npb, (s+1)·npb), exactly the slice shard_map's
+block-axis partition hands each attention-pool device. Allocation places a
+sequence's i-th block ROUND-ROBIN on shard i mod n_shards, so a single
+`long_500k` request's KV spans every chip with per-shard live-token counts
+within one block of even. ``block_table_shards()`` exposes the per-shard
+LOCAL tables plus each slot's global base position (the §4.2.2
+partial-combine backends need true positions because a shard's walk is
+non-contiguous in the sequence).
+
 Invariants (hypothesis-tested in tests/test_kvcache.py):
   * a block is owned by at most one sequence,
   * free + owned == total,
   * a sequence's capacity always covers its token count,
-  * freeing returns exactly the blocks that were owned.
+  * freeing returns exactly the blocks that were owned,
+  * a freed block returns to the shard that owns it.
 """
 from __future__ import annotations
 
@@ -28,6 +40,11 @@ import numpy as np
 
 from repro.models.common import ModelConfig
 
+# Base-position sentinel for table slots a shard does not own — the single
+# definition lives with the kernel; its numeric value is load-bearing for
+# mask correctness across the kernel, jnp partials, and the engines.
+from repro.kernels.paged_decode_attention import POS_PAD  # noqa: F401,E402
+
 
 class OutOfBlocks(RuntimeError):
     pass
@@ -38,16 +55,49 @@ class PagedKVCache:
     cfg: ModelConfig
     num_blocks: int
     block_size: int = 16
+    n_shards: int = 1
 
     def __post_init__(self):
+        if self.num_blocks % self.n_shards:
+            raise ValueError(
+                f"num_blocks ({self.num_blocks}) must divide evenly over "
+                f"n_shards ({self.n_shards}) — the pool's block axis is "
+                f"sharded contiguously over the attention-pool mesh axis")
         hd = self.cfg.resolved_head_dim
         L = self._n_kv_layers()
         self.k_pool = jnp.zeros((L, self.cfg.num_kv_heads, self.num_blocks,
                                  self.block_size, hd), self.cfg.dtype)
         self.v_pool = jnp.zeros_like(self.k_pool)
-        self.free: List[int] = list(range(self.num_blocks))
+        npb = self.blocks_per_shard
+        # per-shard free lists: shard s owns global ids [s·npb, (s+1)·npb)
+        self._free_shard: List[List[int]] = [
+            list(range(s * npb, (s + 1) * npb)) for s in range(self.n_shards)]
         self.tables: Dict[int, List[int]] = {}
         self.lengths: Dict[int, int] = {}
+
+    @property
+    def blocks_per_shard(self) -> int:
+        return self.num_blocks // self.n_shards
+
+    @property
+    def free(self) -> List[int]:
+        """All free block ids (flattened across shards) — read-only view."""
+        return [b for shard in self._free_shard for b in shard]
+
+    def shard_of(self, block_id: int) -> int:
+        return block_id // self.blocks_per_shard
+
+    def _pop_block(self, seq_slot: int) -> int:
+        """Pop a free block for a sequence's `seq_slot`-th table entry:
+        round-robin shard seq_slot mod n_shards, falling back to the
+        least-loaded (most-free) shard when the target is exhausted."""
+        target = seq_slot % self.n_shards
+        if not self._free_shard[target]:
+            target = max(range(self.n_shards),
+                         key=lambda s: len(self._free_shard[s]))
+            if not self._free_shard[target]:
+                raise OutOfBlocks("pool exhausted")
+        return self._free_shard[target].pop()
 
     def _n_kv_layers(self) -> int:
         if self.cfg.family == "hybrid":
@@ -59,31 +109,35 @@ class PagedKVCache:
         return -(-n_tokens // self.block_size)
 
     def can_allocate(self, n_tokens: int) -> bool:
-        return len(self.free) >= self.blocks_needed(n_tokens)
+        return sum(len(s) for s in self._free_shard) >= \
+            self.blocks_needed(n_tokens)
 
     def allocate(self, seq_id: int, n_tokens: int) -> None:
         assert seq_id not in self.tables, f"seq {seq_id} already allocated"
         need = self.blocks_needed(n_tokens)
-        if need > len(self.free):
-            raise OutOfBlocks(f"need {need}, have {len(self.free)}")
-        self.tables[seq_id] = [self.free.pop() for _ in range(need)]
+        have = sum(len(s) for s in self._free_shard)
+        if need > have:
+            raise OutOfBlocks(f"need {need}, have {have}")
+        # round-robin over shards: the sequence's i-th block lands on shard
+        # i mod n_shards, so its KV spans every pool chip near-evenly
+        self.tables[seq_id] = [self._pop_block(i) for i in range(need)]
         self.lengths[seq_id] = n_tokens
 
     def append_token(self, seq_id: int) -> None:
         n = self.lengths[seq_id] + 1
-        if self.blocks_needed(n) > len(self.tables[seq_id]):
-            if not self.free:
-                raise OutOfBlocks("pool exhausted on append")
-            self.tables[seq_id].append(self.free.pop())
+        table = self.tables[seq_id]
+        if self.blocks_needed(n) > len(table):
+            table.append(self._pop_block(len(table)))
         self.lengths[seq_id] = n
 
     def free_seq(self, seq_id: int) -> None:
-        self.free.extend(self.tables.pop(seq_id))
+        for b in self.tables.pop(seq_id):
+            self._free_shard[self.shard_of(b)].append(b)
         del self.lengths[seq_id]
 
     @property
     def used_blocks(self) -> int:
-        return self.num_blocks - len(self.free)
+        return self.num_blocks - sum(len(s) for s in self._free_shard)
 
     def utilisation(self) -> float:
         toks = sum(self.lengths.values())
@@ -102,6 +156,58 @@ class PagedKVCache:
             t = self.tables[sid][:nb]
             tables[i, :len(t)] = t
         return tables, lens
+
+    def block_table_shards(self, seq_ids: Sequence[int]
+                           ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Per-shard LOCAL block tables for the block-parallel decode step.
+
+        Returns (local_tables, local_positions, shard_tokens):
+          * local_tables (n_shards, B, nbl) int32 — pool-block ids LOCAL to
+            each shard's contiguous slice (global − shard·blocks_per_shard),
+            i.e. direct indices into the (npb, block_size, hd) pool slice
+            shard_map hands that device. Pad slots are 0.
+          * local_positions (n_shards, B, nbl) int32 — each slot's global
+            base position in the sequence (slot index in the global table ×
+            block_size); POS_PAD on pad slots so every mask kills them. A
+            shard's walk is non-contiguous in the sequence, so these — not
+            slot·block_size — anchor the causal/window/sink masks.
+          * shard_tokens (n_shards, B) int32 — live tokens per (shard, seq):
+            the per-chip KV-read accounting (round-robin placement keeps
+            max−min ≤ block_size for any single sequence).
+        """
+        B = len(seq_ids)
+        n, npb, bs = self.n_shards, self.blocks_per_shard, self.block_size
+        per = [[[] for _ in range(B)] for _ in range(n)]  # (local id, base)
+        shard_tokens = np.zeros((n, B), np.int32)
+        for i, sid in enumerate(seq_ids):
+            length = self.lengths[sid]
+            for j, g in enumerate(self.tables[sid]):
+                s = self.shard_of(g)
+                per[s][i].append((g - s * npb, j * bs))
+                shard_tokens[s, i] += min(bs, max(0, length - j * bs))
+        nbl = max([1] + [len(per[s][i]) for s in range(n) for i in range(B)])
+        local_tables = np.zeros((n, B, nbl), np.int32)
+        local_positions = np.full((n, B, nbl), POS_PAD, np.int32)
+        for s in range(n):
+            for i in range(B):
+                for j, (lb, base) in enumerate(per[s][i]):
+                    local_tables[s, i, j] = lb
+                    local_positions[s, i, j] = base
+        return local_tables, local_positions, shard_tokens
+
+    def shard_live_tokens(self, seq_ids: Optional[Sequence[int]] = None
+                          ) -> np.ndarray:
+        """(n_shards,) live tokens held per pool shard (all sequences by
+        default) — the per-chip KV balance the block benchmark reports."""
+        if seq_ids is None:
+            seq_ids = list(self.tables)
+        totals = np.zeros((self.n_shards,), np.int64)
+        bs = self.block_size
+        for sid in seq_ids:
+            length = self.lengths[sid]
+            for j, g in enumerate(self.tables[sid]):
+                totals[self.shard_of(g)] += min(bs, max(0, length - j * bs))
+        return totals
 
     # ---------------- data movement ----------------
     def write_prefill(self, seq_id: int, k: jax.Array, v: jax.Array) -> None:

@@ -93,7 +93,8 @@ class MoEOffloadEngine(DisaggEngine):
         self._decode_jit = jax.jit(self._disagg_decode_moe)
 
     def _disagg_decode_moe(self, params, tokens, k_pool, v_pool,
-                           block_tables, lens):
+                           block_tables, lens, shard_tables=None,
+                           shard_positions=None):
         cfg = self.cfg
         cur_len = lens
         x = jnp.take(params["embed"], tokens[:, None], axis=0)
@@ -109,7 +110,8 @@ class MoEOffloadEngine(DisaggEngine):
             # attention pool (paged: workers read the block pool in place)
             attn = self.pool.attend_paged(
                 q[:, 0], k_pool[layer], v_pool[layer], block_tables, cur_len,
-                k[:, 0], v[:, 0], logit_softcap=cfg.attn_logit_softcap)
+                k[:, 0], v[:, 0], logit_softcap=cfg.attn_logit_softcap,
+                shard_tables=shard_tables, shard_positions=shard_positions)
             x = x + out_project(p["attn"], attn[:, None])
             # expert pool (paper §7): router runs on the model worker, the
             # routed FFN on the expert workers

@@ -1,0 +1,32 @@
+"""Benchmark bit-rot guard: `benchmarks.run --quick` must execute EVERY
+registered benchmark at tiny shapes and exit 0 — a benchmark that stops
+importing or running fails tier-1 here, not at paper-figure time."""
+import os
+import subprocess
+import sys
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def test_quick_mode_runs_every_registered_benchmark():
+    env = dict(os.environ, PYTHONPATH=os.pathsep.join(
+        [os.path.join(ROOT, "src"), ROOT]))
+    out = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--quick"],
+        capture_output=True, text=True, env=env, cwd=ROOT, timeout=1200)
+    assert out.returncode == 0, out.stderr[-4000:]
+    sys.path.insert(0, ROOT)
+    try:
+        from benchmarks.run import MODULES
+    finally:
+        sys.path.pop(0)
+    for label, _ in MODULES:
+        assert f"# {label}:" in out.stderr, f"{label} did not run"
+        assert "FAILED" not in out.stderr
+    # CSV rows came out (header + at least one row per module)
+    lines = [l for l in out.stdout.splitlines() if l.strip()]
+    assert lines[0] == "name,us_per_call,derived"
+    assert len(lines) > len(MODULES)
+    # the new block-sharding scenario reports all three partitions
+    for part in ("block", "head", "request"):
+        assert any(l.startswith(f"block_shard_long1_{part}") for l in lines)

@@ -111,3 +111,106 @@ def test_write_token_single_matches_batched():
     b.write_token(9, k1[:, 1], v1[:, 1], 3)
     np.testing.assert_array_equal(np.asarray(a.k_pool), np.asarray(b.k_pool))
     np.testing.assert_array_equal(np.asarray(a.v_pool), np.asarray(b.v_pool))
+
+
+# ---------------------------------------------------------------------------
+# Cross-chip block sharding (n_shards > 1): round-robin placement
+# ---------------------------------------------------------------------------
+def _sharded_cache(num_blocks=32, block_size=4, n_shards=4):
+    cfg = registry.get_smoke_config("llama3-8b")
+    return PagedKVCache(cfg, num_blocks, block_size, n_shards=n_shards)
+
+
+def test_shards_must_divide_num_blocks():
+    with pytest.raises(ValueError):
+        _sharded_cache(num_blocks=30, n_shards=4)
+
+
+def test_round_robin_spans_shards_within_one_block():
+    """A single long sequence's blocks land round-robin: every shard holds
+    KV and the per-shard live-token counts differ by at most one block —
+    the `long_500k`-spans-chips acceptance criterion."""
+    kv = _sharded_cache(num_blocks=64, block_size=4, n_shards=4)
+    kv.allocate(0, 101)  # 26 blocks over 4 shards
+    toks = kv.shard_live_tokens([0])
+    assert (toks > 0).all()
+    assert toks.max() - toks.min() <= kv.block_size
+    assert toks.sum() == 101
+    # appends keep the rotation going
+    for _ in range(23):
+        kv.append_token(0)
+    toks = kv.shard_live_tokens([0])
+    assert toks.max() - toks.min() <= kv.block_size
+    assert toks.sum() == 124
+
+
+def test_block_table_shards_local_ids_and_positions():
+    """Local tables index each shard's contiguous pool slice; positions are
+    the slot's global base; pad slots carry POS_PAD; the union reconstructs
+    the global table exactly."""
+    from repro.serving.kvcache import POS_PAD
+
+    kv = _sharded_cache(num_blocks=32, block_size=4, n_shards=4)
+    kv.allocate(0, 37)
+    kv.allocate(1, 6)
+    ids = [0, 1]
+    lt, lp, st = kv.block_table_shards(ids)
+    npb = kv.blocks_per_shard
+    assert lt.shape == lp.shape and lt.shape[:2] == (4, 2)
+    seen = {sid: {} for sid in ids}
+    for s in range(4):
+        for i, sid in enumerate(ids):
+            for j in range(lt.shape[2]):
+                if lp[s, i, j] == POS_PAD:
+                    continue
+                assert 0 <= lt[s, i, j] < npb
+                slot = lp[s, i, j] // kv.block_size
+                seen[sid][slot] = s * npb + int(lt[s, i, j])
+    for sid in ids:
+        assert [seen[sid][j] for j in range(len(kv.tables[sid]))] == \
+            kv.tables[sid]
+    # live-token accounting sums to the sequence lengths
+    np.testing.assert_array_equal(st.sum(0), [37, 6])
+
+
+def test_freed_blocks_return_to_owner_shard():
+    kv = _sharded_cache(num_blocks=32, block_size=4, n_shards=4)
+    kv.allocate(0, 40)
+    kv.allocate(1, 24)
+    kv.free_seq(0)
+    kv.free_seq(1)
+    npb = kv.blocks_per_shard
+    for s, free in enumerate(kv._free_shard):
+        assert len(free) == npb
+        assert all(b // npb == s for b in free)
+
+
+@settings(deadline=None, max_examples=20)
+@given(ops=st.lists(
+    st.tuples(st.sampled_from(["alloc", "append", "free"]),
+              st.integers(0, 7), st.integers(1, 40)),
+    min_size=1, max_size=60))
+def test_sharded_allocator_invariants(ops):
+    """The base allocator invariants hold under shard-aware round-robin,
+    plus: every free block sits in its owner shard's free list."""
+    kv = _sharded_cache(num_blocks=32, block_size=4, n_shards=4)
+    total = kv.num_blocks
+    npb = kv.blocks_per_shard
+    for kind, sid, n in ops:
+        try:
+            if kind == "alloc" and sid not in kv.tables:
+                kv.allocate(sid, n)
+            elif kind == "append" and sid in kv.tables:
+                kv.append_token(sid)
+            elif kind == "free" and sid in kv.tables:
+                kv.free_seq(sid)
+        except OutOfBlocks:
+            pass
+        owned = [b for t in kv.tables.values() for b in t]
+        assert len(owned) == len(set(owned)), "block owned twice"
+        assert len(owned) + len(kv.free) == total, "blocks leaked"
+        assert set(owned).isdisjoint(kv.free)
+        for s in range(kv.n_shards):
+            assert all(b // npb == s for b in kv._free_shard[s])
+        for s_id, ln in kv.lengths.items():
+            assert len(kv.tables[s_id]) * kv.block_size >= ln

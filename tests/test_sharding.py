@@ -180,3 +180,137 @@ def test_dryrun_entry_small_mesh():
         print("DRYRUN_OK")
     """)
     assert "DRYRUN_OK" in out
+
+
+def test_block_parallel_paged_attention_matches_oracle():
+    """Block-level split: one sequence's KV spans all pool devices
+    (PagedKVCache round-robin shards), per-device partials psum-combined.
+    Must reproduce the full-table paged oracle for both the jnp reference
+    and the Pallas kernel (interpret) in-shard, ragged lengths and
+    window+sinks included."""
+    out = _run_subprocess("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import registry
+        from repro.core import attention_parallel
+        from repro.kernels import ref
+        from repro.launch.mesh import make_test_attn_pool_mesh
+        from repro.serving.kvcache import PagedKVCache
+        mesh = make_test_attn_pool_mesh(n_pool=4, model=2)
+        cfg = registry.get_smoke_config("llama3-8b")
+        Hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+        G = cfg.num_heads // Hkv
+        kv = PagedKVCache(cfg, num_blocks=64, block_size=8, n_shards=4)
+        kv.allocate(0, 200)   # long: spans every shard
+        kv.allocate(1, 13)    # short: some shards hold nothing -> empty
+        rng = np.random.default_rng(0)
+        kv.k_pool = jnp.asarray(rng.standard_normal(kv.k_pool.shape),
+                                jnp.float32)
+        kv.v_pool = jnp.asarray(rng.standard_normal(kv.v_pool.shape),
+                                jnp.float32)
+        bt, lens = kv.block_table_batch([0, 1])
+        lt, lp, st = kv.block_table_shards([0, 1])
+        assert (st.sum(1) > 0).all()  # the batch's KV spans all 4 shards
+        B = 2
+        q = jax.random.normal(jax.random.PRNGKey(1), (B, Hkv * G, hd))
+        clen = jnp.asarray(lens)
+        for kw in ({}, {"sliding_window": 23, "attention_sinks": 3},
+                   {"logit_softcap": 30.0}):
+            want = ref.paged_decode_attention_ref(
+                q.reshape(B, Hkv, G, hd), kv.k_pool[0], kv.v_pool[0],
+                jnp.asarray(bt), clen, **kw).reshape(B, Hkv * G, hd)
+            for backend in ("jnp", "pallas"):
+                got = attention_parallel.block_parallel_paged_decode_attention(
+                    mesh, "attn", q, kv.k_pool[0], kv.v_pool[0],
+                    jnp.asarray(lt), jnp.asarray(lp), clen,
+                    backend=backend, interpret=True, **kw)
+                err = float(jnp.max(jnp.abs(got - want)))
+                assert err < 1e-4, (backend, kw, err)
+        print("BLOCK_PARALLEL_OK")
+    """)
+    assert "BLOCK_PARALLEL_OK" in out
+
+
+def test_paged_parallel_backends_propagate_sinks():
+    """head-/request-level paged backends now carry attention_sinks through
+    to the in-shard kernel/reference."""
+    out = _run_subprocess("""
+        import jax, jax.numpy as jnp
+        from repro.core import attention_parallel
+        from repro.kernels import ref
+        from repro.launch.mesh import make_test_mesh
+        mesh = make_test_mesh((2, 4), ("data", "model"))
+        B, Hkv, G, hd, bs, nb = 4, 4, 2, 32, 8, 4
+        NB = B * nb + 3
+        ks = jax.random.split(jax.random.PRNGKey(0), 4)
+        q = jax.random.normal(ks[0], (B, Hkv * G, hd))
+        kp = jax.random.normal(ks[1], (Hkv, NB, bs, hd))
+        vp = jax.random.normal(ks[2], (Hkv, NB, bs, hd))
+        bt = jax.random.permutation(ks[3], NB)[:B * nb]
+        bt = bt.reshape(B, nb).astype(jnp.int32)
+        clen = jnp.array([32, 7, 20, 15], jnp.int32)
+        kw = dict(sliding_window=9, attention_sinks=2)
+        want = ref.paged_decode_attention_ref(
+            q.reshape(B, Hkv, G, hd), kp, vp, bt, clen, **kw
+            ).reshape(B, Hkv * G, hd)
+        o1 = attention_parallel.head_parallel_paged_decode_attention(
+            mesh, "model", q, kp, vp, bt, clen, **kw)
+        o2 = attention_parallel.request_parallel_paged_decode_attention(
+            mesh, "data", q, kp, vp, bt, clen, **kw)
+        for name, out in (("head", o1), ("request", o2)):
+            err = float(jnp.max(jnp.abs(out - want)))
+            assert err < 1e-4, (name, err)
+        print("PAGED_SINKS_OK")
+    """)
+    assert "PAGED_SINKS_OK" in out
+
+
+def test_psum_combine_matches_combine_many_incl_empty_shard():
+    """psum_combine over a mesh axis == host-side combine_many over the same
+    disjoint partials — including a shard whose subset is EMPTY (m = -inf,
+    s = 0), the case block sharding hits routinely (a device holding none of
+    a short sequence's blocks)."""
+    out = _run_subprocess("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        try:
+            shard_map = jax.shard_map
+        except AttributeError:
+            from jax.experimental.shard_map import shard_map
+        from repro.core import combine as C
+        from repro.launch.mesh import make_test_mesh
+        n = 4
+        mesh = make_test_mesh((n,), ("pool",))
+        B, H, hd, S = 3, 4, 16, 32
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        q = jax.random.normal(ks[0], (B, H, hd))
+        k = jax.random.normal(ks[1], (B, H, S, hd))
+        v = jax.random.normal(ks[2], (B, H, S, hd))
+        Ss = S // n
+        # shard 3's subset is fully masked -> empty partial (m=-inf, s=0)
+        mask = jnp.arange(S) < (S - Ss)
+        parts = [C.partial_attention(q, k[:, :, i*Ss:(i+1)*Ss],
+                                     v[:, :, i*Ss:(i+1)*Ss],
+                                     mask=mask[i*Ss:(i+1)*Ss])
+                 for i in range(n)]
+        want = C.finalize(C.combine_many(parts))
+        # same partials stacked on the mesh axis, merged by psum_combine
+        stacked = C.Partial(*[jnp.stack(a) for a in zip(*parts)])
+        def shard_fn(p):
+            local = C.Partial(p.a[0], p.s[0], p.m[0])
+            return C.finalize(C.psum_combine(local, "pool"))
+        got = shard_map(shard_fn, mesh=mesh,
+                        in_specs=(C.Partial(P("pool"), P("pool"), P("pool")),),
+                        out_specs=P())(stacked)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-5, rtol=1e-5)
+        # all-empty merge stays finite (no NaN from the -inf rebase)
+        empty = C.partial_attention(q, k, v, mask=jnp.zeros((S,), bool))
+        st_e = C.Partial(*[jnp.stack([a]*n) for a in empty])
+        out_e = shard_map(shard_fn, mesh=mesh,
+                          in_specs=(C.Partial(P("pool"), P("pool"),
+                                              P("pool")),),
+                          out_specs=P())(st_e)
+        assert np.all(np.isfinite(np.asarray(out_e)))
+        print("PSUM_COMBINE_OK")
+    """)
+    assert "PSUM_COMBINE_OK" in out
