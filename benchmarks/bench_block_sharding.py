@@ -21,7 +21,9 @@ import numpy as np
 
 from benchmarks.common import time_call
 from repro.configs import registry
-from repro.serving.disagg_engine import BYTES, AttentionWorkerPool
+from repro.models import transformer
+from repro.serving import EngineConfig, LLMEngine
+from repro.serving.disagg_engine import BYTES
 from repro.serving.kvcache import PagedKVCache
 
 N_WORKERS = 4
@@ -56,9 +58,17 @@ def run(quick: bool = False):
     kn = jnp.asarray(rng.standard_normal((1, Hkv, hd)), jnp.float32)
     vn = jnp.asarray(rng.standard_normal((1, Hkv, hd)), jnp.float32)
 
+    # the unified facade assembles the placement: cache sharding, worker
+    # pool, and partition all come from one declarative EngineConfig
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    num_blocks = nb + N_WORKERS + (-(nb + N_WORKERS) % N_WORKERS)
     for partition in ("block", "head", "request"):
-        kv = PagedKVCache(cfg, num_blocks=nb + N_WORKERS, block_size=BLOCK_SIZE,
-                          n_shards=N_WORKERS if partition == "block" else 1)
+        eng = LLMEngine(cfg, params, EngineConfig(
+            placement="attention_pool", partition=partition,
+            attention_workers=N_WORKERS, num_blocks=num_blocks,
+            block_size=BLOCK_SIZE, max_batch=1))
+        kv, pool = eng.kv, eng.pool
+        assert kv.n_shards == (N_WORKERS if partition == "block" else 1)
         kv.allocate(0, S)
         kv.k_pool = jnp.asarray(
             rng.standard_normal(kv.k_pool.shape), jnp.float32)
@@ -66,7 +76,6 @@ def run(quick: bool = False):
             rng.standard_normal(kv.v_pool.shape), jnp.float32)
         tables, lens = kv.block_table_batch([0])
         bt, clen = jnp.asarray(tables), jnp.asarray(lens)
-        pool = AttentionWorkerPool(cfg, N_WORKERS, partition)
         extra = {}
         if partition == "block":
             # compacted per-shard tables: each worker walks only its ~1/n

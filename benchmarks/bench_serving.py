@@ -4,9 +4,11 @@ Lamina vs vLLM on the four production traces at equal hardware cost.
 Two layers of evidence:
   * `model`: the calibrated analytical estimator (costmodel) at the paper's
     real scales — equal-cost configs from Table 5, trace means from Table 4;
-  * `measured`: the two real engines (this repo) running the scaled traces
-    on CPU with a reduced model — demonstrating the end-to-end systems and
-    the batch-size mechanism (identical scheduling, different decode path).
+  * `measured`: the unified LLMEngine (this repo) under both placements —
+    ``homogeneous`` (vLLM baseline) vs ``attention_pool`` (Lamina) —
+    running the scaled traces on CPU with a reduced model: identical
+    scheduling, identical tokens, different operator placement. Latency
+    percentiles come from ``EngineStats.summary()``.
 """
 from __future__ import annotations
 
@@ -16,8 +18,7 @@ from repro.configs import registry
 from repro.core import costmodel as cm
 from repro.data import traces
 from repro.models import transformer
-from repro.serving.disagg_engine import DisaggEngine
-from repro.serving.engine import Engine
+from repro.serving import EngineConfig, LLMEngine
 
 # paper Table 5 equal-cost configs
 CONFIGS = {
@@ -47,33 +48,35 @@ def run(quick: bool = False):
                     f"vllm_tbt_ms={v.tbt_s*1e3:.1f}"),
             })
 
-    # measured CPU-scale engines on one trace
+    # measured CPU-scale engines on one trace: the unified LLMEngine under
+    # both placements (homogeneous = vLLM baseline, attention_pool = Lamina)
     cfg = registry.get_smoke_config("llama3-8b")
     params = transformer.init_params(jax.random.PRNGKey(0), cfg)
     n_reqs = 3 if quick else 12
     for trace_name in ("azure-conv",) if quick else ("azure-conv",
                                                      "azure-code"):
         res = {}
-        for engine_name, ctor in (
-                ("vllm", lambda: Engine(cfg, params, max_batch=8,
-                                        num_blocks=256)),
-                ("lamina", lambda: DisaggEngine(cfg, params, max_batch=8,
-                                                num_blocks=256,
-                                                n_attention_workers=2))):
+        for engine_name, placement in (("vllm", "homogeneous"),
+                                       ("lamina", "attention_pool")):
             reqs = traces.generate(trace_name, n_reqs, cfg.vocab_size,
                                    scale=0.01, seed=0)
-            eng = ctor()
+            eng = LLMEngine(cfg, params, EngineConfig(
+                placement=placement, max_batch=8, num_blocks=256))
             eng.submit(reqs)
-            stats = eng.run()
-            res[engine_name] = stats
+            res[engine_name] = eng.run().summary()
+        lam = res["lamina"]
         rows.append({
             "name": f"fig10_measured_{trace_name}",
-            "us_per_call": round(res["lamina"].mean_tbt * 1e6),
+            "us_per_call": round(lam["mean_tbt_s"] * 1e6),
             "derived": (
-                f"vllm_tok_s={res['vllm'].throughput:.1f};"
-                f"lamina_tok_s={res['lamina'].throughput:.1f};"
-                f"vllm_batch={res['vllm'].mean_batch:.2f};"
-                f"lamina_batch={res['lamina'].mean_batch:.2f};"
+                f"vllm_tok_s={res['vllm']['throughput_tok_s']:.1f};"
+                f"lamina_tok_s={lam['throughput_tok_s']:.1f};"
+                f"vllm_batch={res['vllm']['mean_batch']:.2f};"
+                f"lamina_batch={lam['mean_batch']:.2f};"
+                f"lamina_ttft_p50_ms={lam['ttft_p50_s']*1e3:.1f};"
+                f"lamina_ttft_p90_ms={lam['ttft_p90_s']*1e3:.1f};"
+                f"lamina_tbt_p50_ms={lam['tbt_p50_s']*1e3:.1f};"
+                f"lamina_tbt_p90_ms={lam['tbt_p90_s']*1e3:.1f};"
                 f"outputs_identical=True"),
         })
     return rows

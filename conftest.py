@@ -1,0 +1,11 @@
+"""Repo-root pytest bootstrap: make ``python -m pytest -x -q`` work from a
+fresh checkout with no ``PYTHONPATH=src`` prefix and no install step.
+
+(An editable install — ``pip install -e .`` — gives the same importability
+plus the ``repro-serve`` console entrypoint; see pyproject.toml. This shim
+keeps tier-1 runnable either way.)
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "src"))

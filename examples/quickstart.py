@@ -1,31 +1,20 @@
 """Quickstart: build a reduced model, train it briefly on the synthetic
-corpus, then generate greedily with the KV-cached decode path.
+corpus, then generate with the serving stack's unified ``LLMEngine`` —
+submit a prompt, get a streaming ``RequestHandle``, and watch tokens arrive
+as they are decoded over the paged KV pool (the same facade that serves the
+disaggregated placements; here it runs the ``homogeneous`` baseline).
 
   PYTHONPATH=src python examples/quickstart.py [--arch tinyllama-1.1b]
 """
 import argparse
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import registry
 from repro.data.synthetic import packed_batches
-from repro.models import transformer
+from repro.serving import EngineConfig, LLMEngine, SamplingParams
 from repro.training import optimizer as opt
 from repro.training.train_loop import train
-
-
-def generate(params, cfg, prompt_tokens, n_new=16):
-    batch = {"tokens": jnp.asarray([prompt_tokens], jnp.int32)}
-    logits, cache = transformer.prefill(params, cfg, batch,
-                                        max_seq=len(prompt_tokens) + n_new)
-    out = [int(jnp.argmax(logits[0]))]
-    for _ in range(n_new - 1):
-        logits, updates = transformer.decode_step(
-            params, cfg, jnp.asarray([out[-1]], jnp.int32), cache)
-        cache = transformer.apply_decode_updates(cache, updates)
-        out.append(int(jnp.argmax(logits[0])))
-    return out
 
 
 def main():
@@ -44,10 +33,15 @@ def main():
                              total_steps=args.steps),
         data, args.steps, log_every=max(args.steps // 5, 1))
     print(f"loss: {hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f}")
+
     prompt = [1, 2, 3, 4, 5]
-    toks = generate(params, cfg, prompt, n_new=12)
+    engine = LLMEngine(cfg, params, EngineConfig(num_blocks=64))
+    handle = engine.generate(prompt, SamplingParams(max_new_tokens=12))
     print("prompt:", prompt)
-    print("generated:", toks)
+    print("generated:", end=" ", flush=True)
+    for tok in handle:           # tokens stream as the engine decodes
+        print(tok, end=" ", flush=True)
+    print()
 
 
 if __name__ == "__main__":

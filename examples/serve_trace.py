@@ -1,7 +1,10 @@
-"""End-to-end serving driver (deliverable b): serve a batched request trace
-through BOTH engines — the vLLM-style homogeneous baseline and the Lamina
-disaggregated engine — with continuous batching and the paged KV pool, and
-compare throughput, batch occupancy, and per-layer transfer accounting.
+"""End-to-end serving driver: serve a batched request trace through the
+unified ``LLMEngine`` under BOTH placements — ``homogeneous`` (the
+vLLM-style baseline) and ``attention_pool`` (Lamina) — with continuous
+batching and the paged KV pool, and compare throughput, batch occupancy,
+latency percentiles, and per-layer transfer accounting. Placement is the
+only thing that changes between the two runs: one engine, one scheduler,
+one declarative ``EngineConfig`` knob.
 
   PYTHONPATH=src python examples/serve_trace.py --trace azure-conv \
       --requests 16
@@ -13,8 +16,8 @@ import jax
 from repro.configs import registry
 from repro.data import traces
 from repro.models import transformer
-from repro.serving.disagg_engine import DisaggEngine, expected_transfer_bytes
-from repro.serving.engine import Engine
+from repro.serving import EngineConfig, LLMEngine
+from repro.serving.disagg_engine import expected_transfer_bytes
 
 
 def main():
@@ -25,6 +28,8 @@ def main():
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--scale", type=float, default=0.05)
     ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--scheduler", default="fcfs",
+                    choices=["fcfs", "preempt"])
     args = ap.parse_args()
 
     cfg = registry.get_smoke_config(args.arch)
@@ -32,29 +37,28 @@ def main():
     print(f"== trace {args.trace} x{args.requests} on reduced {cfg.name} ==")
 
     results = {}
-    for name, ctor in (
-            ("vllm-baseline", lambda: Engine(
-                cfg, params, max_batch=args.max_batch, num_blocks=512)),
-            ("lamina", lambda: DisaggEngine(
-                cfg, params, max_batch=args.max_batch, num_blocks=512,
-                n_attention_workers=2))):
+    for placement in ("homogeneous", "attention_pool"):
         reqs = traces.generate(args.trace, args.requests, cfg.vocab_size,
                                scale=args.scale, seed=0)
-        eng = ctor()
+        eng = LLMEngine(cfg, params, EngineConfig(
+            placement=placement, max_batch=args.max_batch, num_blocks=512,
+            scheduler=args.scheduler))
         eng.submit(reqs)
-        stats = eng.run()
-        results[name] = (reqs, stats, eng)
-        print(f"{name:15s} tokens={stats.tokens_generated:5d} "
-              f"mean_batch={stats.mean_batch:5.2f} "
-              f"throughput={stats.throughput:7.1f} tok/s "
-              f"mean_tbt={stats.mean_tbt*1e3:6.2f} ms")
+        eng.run()
+        s = eng.stats.summary()
+        results[placement] = (reqs, eng)
+        print(f"{placement:15s} tokens={s['tokens_generated']:5d} "
+              f"mean_batch={s['mean_batch']:5.2f} "
+              f"throughput={s['throughput_tok_s']:7.1f} tok/s "
+              f"tbt_p50={s['tbt_p50_s']*1e3:6.2f} ms "
+              f"ttft_p90={s['ttft_p90_s']*1e3:7.2f} ms")
 
     # identical outputs (the disaggregation is semantically invisible)
     same = all(a.output == b.output
-               for a, b in zip(results["vllm-baseline"][0],
-                               results["lamina"][0]))
+               for a, b in zip(results["homogeneous"][0],
+                               results["attention_pool"][0]))
     print(f"outputs identical: {same}")
-    eng = results["lamina"][2]
+    eng = results["attention_pool"][1]
     log = eng.pool.log
     per_tok = log.total / max(eng.stats.tokens_generated, 1)
     print(f"lamina per-layer transfers: {log.transfers} "

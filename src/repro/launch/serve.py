@@ -1,8 +1,11 @@
-"""Serving launcher: run the baseline or disaggregated engine on a synthetic
-trace (CPU-scale with reduced configs).
+"""Serving launcher: run the unified LLMEngine on a synthetic trace
+(CPU-scale with reduced configs). Placement is declarative — one engine,
+three placements — and the scheduler is pluggable (fcfs | preempt).
 
-  PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --smoke \
-      --engine lamina --trace azure-conv --requests 16
+  repro-serve --arch llama3-8b --smoke --placement attention_pool \
+      --trace azure-conv --requests 16
+
+  (or: PYTHONPATH=src python -m repro.launch.serve ...)
 """
 from __future__ import annotations
 
@@ -12,8 +15,11 @@ import argparse
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3-8b")
-    ap.add_argument("--engine", default="lamina",
-                    choices=["vllm", "lamina"])
+    ap.add_argument("--placement", default="attention_pool",
+                    choices=["homogeneous", "attention_pool", "moe_offload"])
+    ap.add_argument("--engine", default=None, choices=["vllm", "lamina"],
+                    help="legacy alias: vllm=homogeneous, "
+                         "lamina=attention_pool (overrides --placement)")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--trace", default="azure-conv")
     ap.add_argument("--requests", type=int, default=16)
@@ -22,9 +28,14 @@ def main() -> None:
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--num-blocks", type=int, default=512)
     ap.add_argument("--attention-workers", type=int, default=2)
+    ap.add_argument("--expert-workers", type=int, default=2)
     ap.add_argument("--partition", default="head",
                     choices=["head", "block", "request"])
+    ap.add_argument("--scheduler", default="fcfs",
+                    choices=["fcfs", "preempt"])
     ap.add_argument("--backend", default="jnp", choices=["jnp", "pallas"])
+    ap.add_argument("--events", action="store_true",
+                    help="print the iteration-level lifecycle event stream")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -32,37 +43,50 @@ def main() -> None:
     from repro.configs import registry
     from repro.data import traces
     from repro.models import transformer
-    from repro.serving.disagg_engine import DisaggEngine
-    from repro.serving.engine import Engine
+    from repro.serving import EngineConfig, LLMEngine
 
+    placement = {"vllm": "homogeneous", "lamina": "attention_pool",
+                 None: args.placement}[args.engine]
     cfg = registry.get_smoke_config(args.arch) if args.smoke \
         else registry.get_config(args.arch)
     params = transformer.init_params(jax.random.PRNGKey(args.seed), cfg)
     reqs = traces.generate(args.trace, args.requests, cfg.vocab_size,
                            scale=args.scale, seed=args.seed)
-    if args.engine == "lamina":
-        eng = DisaggEngine(cfg, params, max_batch=args.max_batch,
-                           num_blocks=args.num_blocks,
-                           n_attention_workers=args.attention_workers,
-                           partition=args.partition,
-                           decode_backend=args.backend)
-    else:
-        eng = Engine(cfg, params, max_batch=args.max_batch,
-                     num_blocks=args.num_blocks,
-                     decode_backend=args.backend)
+    econf = EngineConfig(
+        placement=placement, partition=args.partition,
+        attention_workers=args.attention_workers,
+        expert_workers=args.expert_workers,
+        max_batch=args.max_batch, num_blocks=args.num_blocks,
+        scheduler=args.scheduler, decode_backend=args.backend,
+        seed=args.seed)
+    eng = LLMEngine(cfg, params, econf)
     eng.submit(reqs)
-    stats = eng.run()
-    print(f"engine={args.engine} trace={args.trace} "
-          f"requests={len(reqs)} tokens={stats.tokens_generated} "
-          f"mean_batch={stats.mean_batch:.2f} "
-          f"throughput={stats.throughput:.1f} tok/s "
-          f"mean_tbt={stats.mean_tbt*1000:.1f} ms")
-    if args.engine == "lamina":
+    if args.events:
+        for ev in eng.events():      # events() drives the engine to drain
+            print(f"  step {ev.step:4d} {ev.kind:8s} rid={ev.rid} {ev.info}")
+    else:
+        eng.run()
+    s = eng.stats.summary()
+    print(f"placement={placement} partition={args.partition} "
+          f"scheduler={args.scheduler} trace={args.trace} "
+          f"requests={len(reqs)} tokens={s['tokens_generated']} "
+          f"mean_batch={s['mean_batch']:.2f} "
+          f"throughput={s['throughput_tok_s']:.1f} tok/s "
+          f"mean_tbt={s['mean_tbt_s']*1000:.1f} ms "
+          f"preemptions={s['preemptions']}")
+    print(f"ttft_ms p50={s['ttft_p50_s']*1e3:.1f} "
+          f"p90={s['ttft_p90_s']*1e3:.1f} p99={s['ttft_p99_s']*1e3:.1f}  "
+          f"tbt_ms p50={s['tbt_p50_s']*1e3:.1f} "
+          f"p90={s['tbt_p90_s']*1e3:.1f} p99={s['tbt_p99_s']*1e3:.1f}")
+    if eng.pool is not None:
         log = eng.pool.log
         print(f"pool transfers={log.transfers} bytes={log.total} "
               f"(q={log.q_bytes} kv={log.kv_bytes} out={log.out_bytes})")
         print(f"pool partition={args.partition} per_worker_kv_bytes="
               f"{eng.pool.per_worker_kv_bytes}")
+    if eng.expert_pool is not None:
+        elog = eng.expert_pool.log
+        print(f"expert pool transfers={elog.transfers} bytes={elog.total}")
 
 
 if __name__ == "__main__":

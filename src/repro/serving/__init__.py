@@ -1,0 +1,40 @@
+"""Serving subsystem — public API.
+
+The canonical surface is the unified streaming facade::
+
+    from repro.serving import LLMEngine, EngineConfig, Request, SamplingParams
+
+    engine = LLMEngine(cfg, params, EngineConfig(
+        placement="attention_pool", partition="block",
+        attention_workers=4, scheduler="preempt"))
+    handle = engine.generate(prompt_tokens)
+    for token in handle:          # tokens stream as they are generated
+        ...
+    for ev in engine.events():    # admit / preempt / readmit / finish
+        ...
+
+The legacy classes (``Engine``, ``DisaggEngine``, ``MoEOffloadEngine``) are
+deprecated and kept only as greedy-parity oracles for the facade's tests;
+import them from their own modules.
+"""
+from repro.serving.config import EngineConfig
+from repro.serving.engine import EngineStats
+from repro.serving.kvcache import OutOfBlocks, PagedKVCache, PoolExhausted
+from repro.serving.llm_engine import (EngineEvent, LLMEngine, RequestHandle,
+                                      SchedulingStalled)
+from repro.serving.placement import PlacementStrategy, make_placement
+from repro.serving.request import Request, SamplingParams, State
+from repro.serving.sampler import request_key, sample_per_request
+from repro.serving.scheduler import (FCFSPolicy, PreemptingPolicy,
+                                     RequestScheduler, SchedulingPolicy,
+                                     make_policy)
+
+__all__ = [
+    "EngineConfig", "EngineStats", "EngineEvent", "LLMEngine",
+    "RequestHandle", "SchedulingStalled", "PlacementStrategy",
+    "make_placement", "Request", "SamplingParams", "State",
+    "PagedKVCache", "OutOfBlocks", "PoolExhausted",
+    "request_key", "sample_per_request",
+    "FCFSPolicy", "PreemptingPolicy", "RequestScheduler",
+    "SchedulingPolicy", "make_policy",
+]

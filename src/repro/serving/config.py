@@ -1,0 +1,121 @@
+"""Declarative serving configuration — the single knob surface for
+:class:`repro.serving.llm_engine.LLMEngine`.
+
+The paper's thesis is that model-attention disaggregation is a *placement*
+decision, not a different engine: the same continuous-batching loop runs
+whether attention (and optionally the MoE experts) execute fused on the
+model workers or on a memory-optimized pool. ``EngineConfig`` makes that
+decision declarative — one validated dataclass replaces the constructor
+kwarg sprawl of the legacy ``Engine`` → ``DisaggEngine`` →
+``MoEOffloadEngine`` inheritance tower:
+
+  * ``placement``:  ``homogeneous`` (vLLM-style baseline — every operator on
+    the model workers), ``attention_pool`` (Lamina §4 — attention on a
+    memory-device pool), or ``moe_offload`` (§7 — attention AND expert FFNs
+    on pools);
+  * ``partition``:  how the attention pool splits its work — ``head``
+    (Lamina's choice), ``request`` (batch-sharded baseline), or ``block``
+    (pool block axis sharded; one sequence's KV spans every worker);
+  * ``scheduler``:  ``fcfs`` (strict arrival order, no eviction — a request
+    that outgrows the pool surfaces ``PoolExhausted``) or ``preempt``
+    (LIFO victim eviction under pool pressure with recompute re-admission).
+
+Validation happens at construction: impossible combinations (block
+partition with mismatched ``kv_shards``, unknown enum values, non-positive
+sizes) fail loudly *before* any arrays are allocated. Model-dependent
+divisibility checks (kv-head / expert counts vs worker counts) live with
+the placement strategies, which see the ``ModelConfig``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+PLACEMENTS = ("homogeneous", "attention_pool", "moe_offload")
+PARTITIONS = ("head", "request", "block")
+SCHEDULERS = ("fcfs", "preempt")
+BACKENDS = ("jnp", "pallas")
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Validated, declarative serving-engine configuration.
+
+    Frozen so a config can be shared between engines / logged verbatim;
+    derive variants with :meth:`replace`.
+    """
+
+    # ---- placement (the paper's core decision) ----
+    placement: str = "homogeneous"
+    partition: str = "head"            # attention-pool work split
+    attention_workers: int = 2         # pool DOP `b` (paper §5)
+    expert_workers: int = 2            # moe_offload only
+    # (no `overlap` knob: the §4.2.2 overlapped schedule IS the paged path
+    #  — `AttentionWorkerPool.attend_overlapped` aliases `attend_paged`;
+    #  the schedule's latency win is priced analytically in bench_overlap)
+
+    # ---- KV pool ----
+    num_blocks: int = 256
+    block_size: int = 16
+    kv_shards: Optional[int] = None    # None => derived (block partition
+    #                                    shards the pool over the workers)
+
+    # ---- batching / scheduling ----
+    max_batch: int = 8
+    scheduler: str = "fcfs"
+    decode_headroom: int = 8           # tokens reserved per admitted request
+
+    # ---- decode backend / RNG ----
+    decode_backend: str = "jnp"
+    # fallback sampling seed for requests whose SamplingParams.seed is None
+    # (each request's stream is fold_in(PRNGKey(seed), token_index))
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.placement not in PLACEMENTS:
+            raise ValueError(f"placement must be one of {PLACEMENTS}; "
+                             f"got {self.placement!r}")
+        if self.partition not in PARTITIONS:
+            raise ValueError(f"partition must be one of {PARTITIONS}; "
+                             f"got {self.partition!r}")
+        if self.scheduler not in SCHEDULERS:
+            raise ValueError(f"scheduler must be one of {SCHEDULERS}; "
+                             f"got {self.scheduler!r}")
+        if self.decode_backend not in BACKENDS:
+            raise ValueError(f"decode_backend must be one of {BACKENDS}; "
+                             f"got {self.decode_backend!r}")
+        for field in ("attention_workers", "expert_workers", "num_blocks",
+                      "block_size", "max_batch"):
+            if getattr(self, field) < 1:
+                raise ValueError(f"{field} must be >= 1; "
+                                 f"got {getattr(self, field)}")
+        if self.decode_headroom < 0:
+            raise ValueError("decode_headroom must be >= 0")
+        if self.kv_shards is not None and self.kv_shards < 1:
+            raise ValueError(f"kv_shards must be >= 1 (or None to derive); "
+                             f"got {self.kv_shards}")
+        if self.placement != "homogeneous" and self.partition == "block":
+            shards = self.kv_shards
+            if shards is not None and shards != self.attention_workers:
+                raise ValueError(
+                    "block partition shards the pool over the workers: "
+                    f"kv_shards ({shards}) must equal attention_workers "
+                    f"({self.attention_workers})")
+        if self.num_blocks % self.resolved_kv_shards:
+            raise ValueError(
+                f"num_blocks ({self.num_blocks}) must divide evenly over "
+                f"kv_shards ({self.resolved_kv_shards})")
+
+    # ------------------------------------------------------------------
+    @property
+    def resolved_kv_shards(self) -> int:
+        """kv_shards with the block-partition default applied: the pool's
+        block axis is sharded over exactly the attention workers."""
+        if self.kv_shards is not None:
+            return self.kv_shards
+        if self.placement != "homogeneous" and self.partition == "block":
+            return self.attention_workers
+        return 1
+
+    def replace(self, **kw) -> "EngineConfig":
+        return dataclasses.replace(self, **kw)

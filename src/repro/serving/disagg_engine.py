@@ -29,6 +29,15 @@ lowerable on the TPU mesh:
     contribution is merged with the combine identity after K/V arrive. The
     engine tracks the two sub-latencies so the overlap benchmark (Fig. 14)
     can report hidden-vs-exposed time.
+
+DEPRECATED (DisaggEngine only): new code should use
+:class:`repro.serving.llm_engine.LLMEngine` with
+``EngineConfig(placement="attention_pool", partition=...)`` — the sliced
+decode step now lives in ``serving/placement.py`` as a composable strategy
+instead of a subclass override. ``DisaggEngine`` is kept verbatim as the
+greedy-parity oracle for the facade's tests. ``AttentionWorkerPool`` (and
+its transfer accounting) remains canonical and is what the new placement
+strategies compose.
 """
 from __future__ import annotations
 

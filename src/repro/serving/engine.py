@@ -10,6 +10,13 @@ per-step KV traffic is exactly one read of the live KV), and the new token's
 K/V lands with one batched `write_tokens` scatter. Sampling is per-request
 (each Request's own SamplingParams). Designed for reduced configs in
 tests/examples; the dry-run path exercises the full-size shapes.
+
+DEPRECATED: new code should use :class:`repro.serving.llm_engine.LLMEngine`
+with ``EngineConfig(placement="homogeneous")`` — one facade serves every
+placement with a streaming request lifecycle. This class is kept verbatim
+as the greedy-parity oracle for the facade's tests and will be deleted once
+downstream callers have migrated. (``EngineStats`` stays canonical here —
+both generations share it.)
 """
 from __future__ import annotations
 
@@ -35,6 +42,11 @@ class EngineStats:
     tokens_generated: int = 0
     batch_sizes: List[int] = dataclasses.field(default_factory=list)
     step_times: List[float] = dataclasses.field(default_factory=list)
+    # per-request latency samples (seconds) — populated by observe_request
+    # on retirement; the percentile surface bench_serving reports
+    request_ttfts: List[float] = dataclasses.field(default_factory=list)
+    request_tbts: List[float] = dataclasses.field(default_factory=list)
+    preemptions: int = 0
 
     @property
     def mean_batch(self) -> float:
@@ -48,6 +60,48 @@ class EngineStats:
     @property
     def mean_tbt(self) -> float:
         return float(np.mean(self.step_times)) if self.step_times else 0.0
+
+    # ---------------- per-request latency surface ----------------
+    def observe_request(self, req) -> None:
+        """Fold one retired request's latencies in: TTFT (arrival to first
+        token) and its mean time-between-tokens."""
+        if req.first_token_s is not None:
+            self.request_ttfts.append(req.first_token_s - req.arrival_s)
+        if len(req.token_times) >= 2:
+            self.request_tbts.append(req.tbt_s())
+
+    @staticmethod
+    def _pcts(samples: List[float]) -> Dict[str, float]:
+        if not samples:
+            return {"p50": 0.0, "p90": 0.0, "p99": 0.0}
+        arr = np.asarray(samples, np.float64)
+        return {p: float(np.percentile(arr, q))
+                for p, q in (("p50", 50), ("p90", 90), ("p99", 99))}
+
+    def ttft_percentiles(self) -> Dict[str, float]:
+        """p50/p90/p99 time-to-first-token over retired requests (s)."""
+        return self._pcts(self.request_ttfts)
+
+    def tbt_percentiles(self) -> Dict[str, float]:
+        """p50/p90/p99 of per-request mean time-between-tokens (s)."""
+        return self._pcts(self.request_tbts)
+
+    def summary(self) -> Dict[str, float]:
+        """Flat scalar summary (the dict bench_serving reports)."""
+        out = {
+            "steps": self.steps,
+            "tokens_generated": self.tokens_generated,
+            "requests": len(self.request_ttfts),
+            "mean_batch": self.mean_batch,
+            "throughput_tok_s": self.throughput,
+            "mean_tbt_s": self.mean_tbt,
+            "preemptions": self.preemptions,
+        }
+        for name, pcts in (("ttft", self.ttft_percentiles()),
+                           ("tbt", self.tbt_percentiles())):
+            for p, v in pcts.items():
+                out[f"{name}_{p}_s"] = v
+        return out
 
 
 class Engine:

@@ -50,6 +50,23 @@ class OutOfBlocks(RuntimeError):
     pass
 
 
+class PoolExhausted(OutOfBlocks):
+    """Pool-exhaustion with full context: which request hit the wall, how
+    many tokens are live in the pool, and how many blocks remain free —
+    the signal the preemption-capable scheduling policy consumes (and the
+    clear error FCFS surfaces instead of failing deep in the allocator).
+
+    Subclasses :class:`OutOfBlocks` so pre-existing handlers keep working.
+    """
+
+    def __init__(self, message: str, *, rid: Optional[int] = None,
+                 live_tokens: int = 0, free_blocks: int = 0):
+        super().__init__(message)
+        self.rid = rid
+        self.live_tokens = live_tokens
+        self.free_blocks = free_blocks
+
+
 @dataclasses.dataclass
 class PagedKVCache:
     cfg: ModelConfig
@@ -127,7 +144,18 @@ class PagedKVCache:
         n = self.lengths[seq_id] + 1
         table = self.tables[seq_id]
         if self.blocks_needed(n) > len(table):
-            table.append(self._pop_block(len(table)))
+            try:
+                table.append(self._pop_block(len(table)))
+            except OutOfBlocks:
+                free = sum(len(s) for s in self._free_shard)
+                live = sum(self.lengths.values())
+                raise PoolExhausted(
+                    f"KV pool exhausted growing request {seq_id} to token "
+                    f"{n}: {live} live tokens across {len(self.tables)} "
+                    f"sequences occupy all {self.num_blocks} blocks "
+                    f"({free} free) — preempt a victim or raise num_blocks",
+                    rid=seq_id, live_tokens=live, free_blocks=free
+                ) from None
         self.lengths[seq_id] = n
 
     def free_seq(self, seq_id: int) -> None:
@@ -215,6 +243,16 @@ class PagedKVCache:
         prefill cache layout, stored without any transpose."""
         S = k.shape[2]
         table = self.tables[seq_id]
+        if S > len(table) * self.block_size:
+            free = sum(len(s) for s in self._free_shard)
+            live = sum(self.lengths.values())
+            raise PoolExhausted(
+                f"request {seq_id}: write_prefill of {S} tokens exceeds its "
+                f"allocated {len(table)} blocks × {self.block_size} "
+                f"(= {len(table) * self.block_size} tokens); pool holds "
+                f"{live} live tokens with {free} of {self.num_blocks} "
+                f"blocks free — allocate() must cover the prompt first",
+                rid=seq_id, live_tokens=live, free_blocks=free)
         pad = len(table) * self.block_size - S
         if pad:
             k = jnp.pad(k, [(0, 0), (0, 0), (0, pad), (0, 0)])

@@ -1,0 +1,388 @@
+"""LLMEngine — the unified streaming serving facade.
+
+One engine serves every placement the paper studies. Placement is a
+declarative :class:`~repro.serving.config.EngineConfig` decision
+(``homogeneous`` | ``attention_pool`` | ``moe_offload`` × ``head`` |
+``request`` | ``block``), realised by a composable
+:class:`~repro.serving.placement.PlacementStrategy` instead of the legacy
+``Engine`` → ``DisaggEngine`` → ``MoEOffloadEngine`` inheritance tower; and
+scheduling is a pluggable :class:`~repro.serving.scheduler.SchedulingPolicy`
+(FCFS, or preemption under pool pressure with recompute re-admission).
+
+The request lifecycle is streaming, not batch:
+
+  * :meth:`LLMEngine.submit` returns a :class:`RequestHandle` per request;
+    iterating a handle drives the engine and yields token ids *as they are
+    generated* — a handle's consumer sees tokens while the rest of the
+    continuous batch is still decoding;
+  * :meth:`LLMEngine.events` streams iteration-level lifecycle events
+    (``submit`` / ``admit`` / ``readmit`` / ``preempt`` / ``finish``);
+  * :meth:`LLMEngine.run` keeps the legacy drain-everything loop.
+
+Preemption fixes the legacy engines' latent OOM: a request that outlives
+its ``decode_headroom`` margin used to exhaust the pool with no recourse
+(``OutOfBlocks`` deep in the allocator, pool stranded mid-decode). Now the
+engine checks pool pressure *before* each decode iteration; under the
+``preempt`` policy it evicts a victim's blocks back to the pool (generated
+tokens kept) and later re-admits it via recompute — greedy decoding resumes
+bit-identically (same mechanism as the paper-§5 fault-tolerance path).
+Under ``fcfs`` the same condition surfaces a clear
+:class:`~repro.serving.kvcache.PoolExhausted` naming the offending request,
+live tokens, and free blocks.
+
+Sampling honours ``SamplingParams.seed``: each request draws token `i` from
+``fold_in(PRNGKey(its seed), i)`` — its stochastic stream is independent of
+batch composition, admission order, and preemption, so identical requests
+reproduce identically wherever and whenever they run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Iterator, List, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer
+from repro.models.common import ModelConfig
+from repro.serving.config import EngineConfig
+from repro.serving.engine import EngineStats
+from repro.serving.kvcache import PagedKVCache, PoolExhausted
+from repro.serving.placement import PlacementStrategy, make_placement
+from repro.serving.request import Request, SamplingParams, State
+from repro.serving.sampler import request_key, sample_per_request
+from repro.serving.scheduler import RequestScheduler, make_policy
+
+
+class SchedulingStalled(RuntimeError):
+    """Nothing is running and the head of the waiting queue can never be
+    admitted — the engine would spin forever. Raised instead."""
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineEvent:
+    """One iteration-level lifecycle event (the ``events()`` stream)."""
+
+    kind: str          # submit | admit | readmit | preempt | finish
+    rid: int
+    step: int          # engine step counter when the event fired
+    info: Dict = dataclasses.field(default_factory=dict)
+
+
+class RequestHandle:
+    """Streaming view of one submitted request.
+
+    Iterating yields token ids incrementally, driving the engine only as
+    far as needed — tokens arrive while the rest of the batch is still
+    decoding. The handle never rewinds: preemption keeps generated tokens
+    (re-admission recomputes KV, not text), so every yielded token is
+    final.
+    """
+
+    __slots__ = ("request", "_engine")
+
+    def __init__(self, engine: "LLMEngine", request: Request):
+        self._engine = engine
+        self.request = request
+
+    @property
+    def rid(self) -> int:
+        return self.request.rid
+
+    @property
+    def finished(self) -> bool:
+        return self.request.state == State.FINISHED
+
+    @property
+    def output(self) -> List[int]:
+        return self.request.output
+
+    def __iter__(self) -> Iterator[int]:
+        sent = 0
+        while True:
+            out = self.request.output
+            while sent < len(out):
+                yield out[sent]
+                sent += 1
+            if self.request.state == State.FINISHED:
+                return
+            self._engine.step()
+
+    def result(self) -> List[int]:
+        """Drain the stream; returns the complete output token list."""
+        for _ in self:
+            pass
+        return self.request.output
+
+    def __repr__(self):
+        return (f"RequestHandle(rid={self.rid}, "
+                f"state={self.request.state.value}, "
+                f"tokens={len(self.request.output)})")
+
+
+class LLMEngine:
+    """The unified serving facade: one engine, every placement."""
+
+    def __init__(self, cfg: ModelConfig, params,
+                 engine_config: Optional[EngineConfig] = None, **overrides):
+        """``overrides`` are EngineConfig fields for call-site convenience:
+        ``LLMEngine(cfg, params, placement="attention_pool", partition=
+        "block")`` ≡ passing the equivalent validated EngineConfig."""
+        if cfg.family not in ("dense", "moe", "vlm"):
+            raise ValueError("engine serves KV-cache architectures; "
+                             f"got family={cfg.family}")
+        econf = engine_config or EngineConfig()
+        if overrides:
+            econf = econf.replace(**overrides)
+        self.cfg = cfg
+        self.config = econf
+        self.params = params
+        self.kv = PagedKVCache(cfg, econf.num_blocks, econf.block_size,
+                               n_shards=econf.resolved_kv_shards)
+        self.placement: PlacementStrategy = make_placement(cfg, econf)
+        self.policy = make_policy(econf.scheduler)
+        self.sched = RequestScheduler(self.kv, econf.max_batch, self.policy,
+                                      econf.decode_headroom)
+        self.stats = EngineStats()
+        self._decode_jit = jax.jit(self.placement.decode_fn())
+        self._prefill_jit = jax.jit(
+            lambda p, b: transformer.prefill(p, cfg, b,
+                                             max_seq=b["tokens"].shape[1]))
+        self._events: List[EngineEvent] = []
+        self._step_no = 0
+
+    # ------------------------------------------------------------------
+    # submission / streaming surface
+    # ------------------------------------------------------------------
+    def submit(self, reqs: Union[Request, Sequence[Request]]
+               ) -> Union[RequestHandle, List[RequestHandle]]:
+        """Enqueue request(s); returns one streaming handle per request
+        (a single handle for a single request)."""
+        single = isinstance(reqs, Request)
+        batch = [reqs] if single else list(reqs)
+        handles = []
+        for req in batch:
+            self._emit("submit", req.rid)
+            if not req.output and req.done():      # max_new_tokens == 0
+                req.state = State.FINISHED
+                req.finish_s = time.time()
+                self._emit("finish", req.rid, tokens=0)
+            else:
+                self.sched.submit([req])
+            handles.append(RequestHandle(self, req))
+        return handles[0] if single else handles
+
+    def generate(self, prompt: Sequence[int],
+                 params: Optional[SamplingParams] = None) -> RequestHandle:
+        """Convenience: wrap a raw prompt in a Request and submit it."""
+        return self.submit(Request(prompt=list(prompt),
+                                   params=params or SamplingParams()))
+
+    def events(self) -> Iterator[EngineEvent]:
+        """Stream lifecycle events, driving the engine while work remains.
+        Yields everything recorded so far, then steps the engine for more;
+        ends when the engine drains. (``event_log`` is the passive view.)"""
+        i = 0
+        while True:
+            while i < len(self._events):
+                yield self._events[i]
+                i += 1
+            if not self.sched.has_work():
+                return
+            self.step()
+
+    @property
+    def event_log(self) -> List[EngineEvent]:
+        return list(self._events)
+
+    def _emit(self, kind: str, rid: int, **info) -> None:
+        self._events.append(EngineEvent(kind, rid, self._step_no, info))
+
+    # ------------------------------------------------------------------
+    # the iteration
+    # ------------------------------------------------------------------
+    def step(self) -> None:
+        """One engine iteration: admit (prefill / recompute), resolve pool
+        pressure (possibly preempting), decode one token for every running
+        request, retire the finished."""
+        self._step_no += 1
+        while True:
+            admitted = self.sched.admit()
+            for req in admitted:
+                if req.output:                 # preempted earlier: recompute
+                    self._recompute(req)
+                    self._emit("readmit", req.rid,
+                               recomputed_tokens=self.kv.lengths[req.rid])
+                else:
+                    self._emit("admit", req.rid, prompt_len=len(req.prompt))
+                    self._prefill(req)
+            self._retire()                     # EOS-at-prefill frees early
+            # an admission wave that finished entirely at prefill just
+            # returned its blocks — the next waiting request may fit NOW
+            if self.sched.running or not admitted:
+                break
+        if not self.sched.running and self.sched.waiting:
+            head = self.sched.waiting[0]
+            need = self.sched.stored_tokens(head) + self.sched.decode_headroom
+            raise SchedulingStalled(
+                f"request {head.rid} needs {self.kv.blocks_needed(need)} "
+                f"blocks ({need} tokens incl. headroom) but the pool only "
+                f"has {self.kv.num_blocks} blocks total "
+                f"({len(self.kv.free)} free) and nothing is running — it "
+                f"can never be admitted; shrink the prompt or grow "
+                f"num_blocks")
+        self._decode_iteration()
+        self._retire()
+
+    def run(self, max_steps: int = 10_000) -> EngineStats:
+        steps = 0
+        while self.sched.has_work() and steps < max_steps:
+            self.step()
+            steps += 1
+        return self.stats
+
+    def has_work(self) -> bool:
+        return self.sched.has_work()
+
+    def _retire(self) -> None:
+        for req in self.sched.retire_finished():
+            self.stats.observe_request(req)
+            self._emit("finish", req.rid, tokens=len(req.output))
+
+    # ------------------------------------------------------------------
+    # prefill / recompute
+    # ------------------------------------------------------------------
+    def _prefill(self, req: Request) -> None:
+        toks = jnp.asarray([req.prompt], jnp.int32)
+        logits, cache = self._prefill_jit(self.params, {"tokens": toks})
+        # cache k/v are head-major (L, 1, Hkv, S, hd) — the pool's layout
+        self.kv.write_prefill(req.rid, cache["k"][:, 0], cache["v"][:, 0])
+        tok = self._sample([req], logits)
+        req.record_token(int(tok[0]))
+        # the sampled token's K/V gets stored by the next decode pass (it is
+        # that step's input token); kv.lengths stays = stored tokens
+
+    def _recompute(self, req: Request) -> None:
+        """Re-admission of a preempted request: rebuild its pool KV by
+        re-prefilling prompt + generated tokens minus the still-unstored
+        last one (the next decode input) — the §5 recovery path. No token
+        is sampled: the stream continues from ``req.output[-1]``."""
+        known = req.prompt + req.output[:-1]
+        toks = jnp.asarray([known], jnp.int32)
+        _, cache = self._prefill_jit(self.params, {"tokens": toks})
+        self.kv.write_prefill(req.rid, cache["k"][:, 0], cache["v"][:, 0])
+
+    # ------------------------------------------------------------------
+    # decode
+    # ------------------------------------------------------------------
+    def _decode_iteration(self) -> None:
+        running = [r for r in self.sched.running if r.state == State.RUNNING]
+        if not running:
+            return
+        running = self._resolve_pool_pressure(running)
+        if not running:
+            return
+        ids = [r.rid for r in running]
+        # placement-specific per-iteration operands + per-worker accounting
+        extra = self.placement.decode_extra_args(self.kv, ids)
+        tables, lens = self.kv.block_table_batch(ids)
+        tokens = jnp.asarray([r.output[-1] for r in running], jnp.int32)
+        t0 = time.time()
+        logits, updates = self._decode_jit(
+            self.params, tokens, self.kv.k_pool, self.kv.v_pool,
+            jnp.asarray(tables), jnp.asarray(lens), *extra)
+        logits.block_until_ready()
+        dt = time.time() - t0
+        # placement is the memory pool's job: append the input token's K/V
+        # (allocator bookkeeping per sequence, then ONE batched scatter)
+        positions = [int(n) for n in lens]
+        for r in running:
+            self.kv.append_token(r.rid)
+        self.kv.write_tokens(ids, updates["k_new"], updates["v_new"],
+                             positions)
+        toks = self._sample(running, logits)
+        for i, r in enumerate(running):
+            r.record_token(int(toks[i]))
+        self.placement.log_step(len(running))
+        self.stats.steps += 1
+        self.stats.tokens_generated += len(running)
+        self.stats.batch_sizes.append(len(running))
+        self.stats.step_times.append(dt)
+
+    def _resolve_pool_pressure(self, running: List[Request]
+                               ) -> List[Request]:
+        """Ensure every running sequence can store one more token. Each
+        grower needs exactly one fresh block; when the pool can't cover
+        them, the policy evicts victims (blocks freed back to the pool,
+        re-admission via recompute) or — non-preemptible — the engine
+        surfaces the allocator's PoolExhausted signal up front instead of
+        stranding the pool mid-iteration."""
+        def needs_block(r: Request) -> bool:
+            return self.kv.blocks_needed(self.kv.lengths[r.rid] + 1) > \
+                len(self.kv.tables[r.rid])
+
+        while True:
+            growers = [r for r in running if needs_block(r)]
+            free = len(self.kv.free)
+            if len(growers) <= free:
+                return running
+            victim = self.policy.select_victim(running)
+            if victim is None:
+                g = growers[0]
+                fix = ("a sole running request has no viable victim — "
+                       "raise num_blocks" if self.policy.preemptible
+                       else "use scheduler='preempt' or raise num_blocks")
+                raise PoolExhausted(
+                    f"KV pool exhausted: request {g.rid} "
+                    f"({self.kv.lengths[g.rid]} stored tokens) needs a "
+                    f"block and {free} of {self.kv.num_blocks} are free "
+                    f"({sum(self.kv.lengths.values())} live tokens across "
+                    f"{len(self.kv.tables)} sequences); the "
+                    f"{self.policy.name!r} policy found no victim: {fix}",
+                    rid=g.rid,
+                    live_tokens=sum(self.kv.lengths.values()),
+                    free_blocks=free)
+            freed = self.sched.preempt(victim)
+            # the scheduler's counter is the source of truth; stats mirrors
+            # it (assignment, not increment — the two can never diverge)
+            self.stats.preemptions = self.sched.n_preemptions
+            self._emit("preempt", victim.rid, freed_blocks=freed,
+                       generated_tokens=len(victim.output))
+            running = [r for r in running if r is not victim]
+
+    # ------------------------------------------------------------------
+    # sampling (per-request PRNG streams — SamplingParams.seed honoured)
+    # ------------------------------------------------------------------
+    def _sample(self, reqs: List[Request], logits: jax.Array) -> jax.Array:
+        keys = jnp.stack([self._request_key(r) for r in reqs])
+        temps = np.asarray([r.params.temperature for r in reqs], np.float32)
+        topks = np.asarray([r.params.top_k for r in reqs], np.int32)
+        return sample_per_request(logits, keys, temps, topks)
+
+    def _request_key(self, req: Request) -> jax.Array:
+        # token i of this request always draws from stream index i, via the
+        # one canonical seed→stream mapping (sampler.request_key); a request
+        # without its own seed falls back to the engine's
+        seed = req.params.seed
+        return request_key(self.config.seed if seed is None else seed,
+                           len(req.output))
+
+    # ------------------------------------------------------------------
+    # introspection (CLI / benchmarks)
+    # ------------------------------------------------------------------
+    @property
+    def pool(self):
+        """The attention worker pool (None for homogeneous placement)."""
+        return self.placement.pool
+
+    @property
+    def expert_pool(self):
+        """The expert worker pool (moe_offload placement only)."""
+        return self.placement.expert_pool
+
+    @property
+    def transfer_log(self):
+        return self.placement.transfer_log
+

@@ -16,6 +16,12 @@ affordable. This module realises that proposal:
     more favourable);
   * MoEOffloadEngine plugs the pool into the disaggregated decode step, so a
     qwen3/kimi-style model runs with BOTH attention and experts offloaded.
+
+DEPRECATED (MoEOffloadEngine only): new code should use
+:class:`repro.serving.llm_engine.LLMEngine` with
+``EngineConfig(placement="moe_offload")``. The engine subclass is kept
+verbatim as the greedy-parity oracle for the facade's tests;
+``ExpertWorkerPool`` and the analytic bounds remain canonical.
 """
 from __future__ import annotations
 

@@ -13,6 +13,9 @@ _ids = itertools.count()
 class State(enum.Enum):
     WAITING = "waiting"
     RUNNING = "running"
+    # evicted under pool pressure; blocks returned to the pool, generated
+    # tokens kept — re-admission recomputes the KV by re-prefilling
+    PREEMPTED = "preempted"
     FINISHED = "finished"
 
 
@@ -22,7 +25,10 @@ class SamplingParams:
     temperature: float = 0.0       # 0 => greedy
     top_k: int = 0                 # 0 => full softmax
     eos_token: Optional[int] = None
-    seed: int = 0
+    # per-request PRNG stream seed; None falls back to the engine's
+    # EngineConfig.seed (LLMEngine derives token i's draw from
+    # fold_in(PRNGKey(seed), i) — batch-composition independent)
+    seed: Optional[int] = None
 
 
 @dataclasses.dataclass

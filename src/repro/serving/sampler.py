@@ -21,15 +21,22 @@ def sample(logits: jax.Array, key, temperature: float = 0.0,
     return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
 
 
-def sample_batch(logits: jax.Array, key, temperatures: jax.Array,
-                 top_ks: jax.Array) -> jax.Array:
-    """Per-request sampling for a continuous batch.
+def request_key(seed: int, token_index: int) -> jax.Array:
+    """Per-request PRNG stream honoring ``SamplingParams.seed``: token `i`
+    of a request seeded `s` is always drawn from fold_in(PRNGKey(s), i) —
+    independent of batch composition, admission order, or preemption, so
+    identical requests reproduce identically wherever they run."""
+    return jax.random.fold_in(jax.random.PRNGKey(seed), token_index)
 
-    logits: (B, V); temperatures: (B,) float (<= 0 → greedy for that row);
-    top_ks: (B,) int (0 → full softmax). Rows are independent: each gets its
-    own temperature scaling and top-k cutoff (a sort-based cutoff, since
-    ``lax.top_k`` needs a static k and k varies per row). Greedy rows are
-    argmax regardless of the drawn sample. Returns (B,) int32."""
+
+def _scale_and_mask(logits: jax.Array, temperatures, top_ks):
+    """Shared per-row temperature scaling + top-k cutoff for the batch
+    samplers. Returns (greedy, scaled, temps): greedy argmax per row, the
+    scaled logits with sub-cutoff entries at -inf (a sort-based cutoff,
+    since ``lax.top_k`` needs a static k and k varies per row), and the
+    float temps. The two samplers differ ONLY in how they draw from
+    `scaled` — keep any cutoff/tie semantics change here so they can't
+    diverge."""
     logits = logits.astype(jnp.float32)
     V = logits.shape[-1]
     temps = jnp.asarray(temperatures, jnp.float32)
@@ -40,5 +47,32 @@ def sample_batch(logits: jax.Array, key, temperatures: jax.Array,
     kidx = jnp.where(ks > 0, jnp.minimum(ks, V) - 1, V - 1)
     cutoff = jnp.take_along_axis(srt, kidx[:, None], axis=-1)
     scaled = jnp.where(scaled < cutoff, -jnp.inf, scaled)
+    return greedy, scaled, temps
+
+
+def sample_per_request(logits: jax.Array, keys: jax.Array,
+                       temperatures, top_ks) -> jax.Array:
+    """Per-request sampling with per-request PRNG streams.
+
+    logits: (B, V); keys: (B, 2) uint32 — one :func:`request_key` per row;
+    temperatures: (B,) float (<= 0 → greedy for that row); top_ks: (B,) int
+    (0 → full softmax). Same cutoff semantics as :func:`sample_batch`, but
+    each row draws from its own key, so a request's stochastic stream is a
+    pure function of (its seed, its token index). Returns (B,) int32."""
+    greedy, scaled, temps = _scale_and_mask(logits, temperatures, top_ks)
+    drawn = jax.vmap(lambda k, row: jax.random.categorical(k, row))(
+        keys, scaled).astype(jnp.int32)
+    return jnp.where(temps <= 0.0, greedy, drawn)
+
+
+def sample_batch(logits: jax.Array, key, temperatures: jax.Array,
+                 top_ks: jax.Array) -> jax.Array:
+    """Per-request sampling for a continuous batch, one shared batch key.
+
+    logits: (B, V); temperatures: (B,) float (<= 0 → greedy for that row);
+    top_ks: (B,) int (0 → full softmax). Rows are independent: each gets its
+    own temperature scaling and top-k cutoff. Greedy rows are argmax
+    regardless of the drawn sample. Returns (B,) int32."""
+    greedy, scaled, temps = _scale_and_mask(logits, temperatures, top_ks)
     drawn = jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)
     return jnp.where(temps <= 0.0, greedy, drawn)

@@ -1,12 +1,31 @@
-"""Continuous (iteration-level) batching scheduler — Orca-style, the policy
-vLLM uses and the paper's baseline runs. Admits waiting requests whenever the
-paged pool can hold their prompt plus a decode-headroom margin, up to
-max_batch concurrent sequences; finished sequences release their blocks
-immediately."""
+"""Iteration-level scheduling for the serving engines.
+
+Two generations live here:
+
+  * :class:`Scheduler` — the original Orca-style FCFS admitter used by the
+    legacy ``Engine``/``DisaggEngine`` classes (kept verbatim as the parity
+    oracle; slated for deletion with them).
+  * :class:`SchedulingPolicy` + :class:`RequestScheduler` — the pluggable
+    scheduler behind :class:`repro.serving.llm_engine.LLMEngine`. The
+    policy decides *who* gets admitted and *who* gets evicted under pool
+    pressure; the scheduler owns the queues and the KV-pool bookkeeping
+    (allocate on admit, free on retire/preempt). This is the hook surface
+    the ROADMAP's prefix-sharing and chunked-prefill items plug into.
+
+Preemption model (``PreemptingPolicy``): when a decode iteration needs more
+blocks than the pool has free (requests outliving their ``decode_headroom``
+margin), the policy picks a victim — LIFO over admission order, vLLM's
+choice: the most recently admitted request has the least sunk work — whose
+blocks are freed back to the pool. The victim's generated tokens are kept;
+on re-admission its KV is *recomputed* by re-prefilling prompt + generated
+tokens (minus the still-unstored last token — exactly the fault-tolerance
+recovery path, paper §5), so greedy decoding resumes bit-identically.
+Preempted requests re-enter at the FRONT of the waiting queue.
+"""
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import List, Optional, Protocol, Sequence, runtime_checkable
 
 from repro.serving.kvcache import PagedKVCache
 from repro.serving.request import Request, State
@@ -14,6 +33,8 @@ from repro.serving.request import Request, State
 
 @dataclasses.dataclass
 class Scheduler:
+    """Legacy FCFS admitter (pre-``LLMEngine``; parity oracle only)."""
+
     kv: PagedKVCache
     max_batch: int
     decode_headroom: int = 8     # extra tokens reserved per admitted request
@@ -40,6 +61,144 @@ class Scheduler:
             self.running.append(req)
             admitted.append(req)
         return admitted
+
+    def retire_finished(self) -> List[Request]:
+        done = [r for r in self.running if r.state == State.FINISHED]
+        for r in done:
+            self.kv.free_seq(r.rid)
+        self.running = [r for r in self.running if r.state != State.FINISHED]
+        return done
+
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.running)
+
+
+# ======================================================================
+# Pluggable scheduling (LLMEngine)
+# ======================================================================
+
+@runtime_checkable
+class SchedulingPolicy(Protocol):
+    """Decides admission order and preemption victims.
+
+    ``select_victim`` returns the running request to evict under pool
+    pressure, or ``None`` when the policy does not preempt (the engine then
+    surfaces :class:`repro.serving.kvcache.PoolExhausted`). ``running`` is
+    in admission order; the victim must come from it.
+    """
+
+    name: str
+    preemptible: bool
+
+    def select_victim(self, running: Sequence[Request]) -> Optional[Request]:
+        ...
+
+
+class FCFSPolicy:
+    """Strict arrival order, no eviction — the legacy behaviour, now
+    explicit: under pool pressure the engine raises ``PoolExhausted``
+    instead of stranding the pool mid-decode."""
+
+    name = "fcfs"
+    preemptible = False
+
+    def select_victim(self, running: Sequence[Request]) -> Optional[Request]:
+        return None
+
+    def __repr__(self):
+        return "FCFSPolicy()"
+
+
+class PreemptingPolicy(FCFSPolicy):
+    """FCFS admission + LIFO victim eviction under pool pressure."""
+
+    name = "preempt"
+    preemptible = True
+
+    def select_victim(self, running: Sequence[Request]) -> Optional[Request]:
+        # last admitted = least sunk prefill/decode work (vLLM's recompute
+        # preemption picks the same victim); never the head of the batch —
+        # evicting the oldest request could livelock admission against it.
+        if len(running) < 2:
+            return None
+        return running[-1]
+
+    def __repr__(self):
+        return "PreemptingPolicy()"
+
+
+POLICIES = {"fcfs": FCFSPolicy, "preempt": PreemptingPolicy}
+
+
+def make_policy(name: str) -> SchedulingPolicy:
+    try:
+        return POLICIES[name]()
+    except KeyError:
+        raise ValueError(f"unknown scheduler policy {name!r}; "
+                         f"choose from {sorted(POLICIES)}") from None
+
+
+@dataclasses.dataclass
+class RequestScheduler:
+    """Queue + KV-pool bookkeeping behind ``LLMEngine``.
+
+    Differences from the legacy :class:`Scheduler`:
+      * the admission/eviction *decisions* are delegated to a
+        :class:`SchedulingPolicy`;
+      * preempted requests are supported end to end: :meth:`preempt` frees
+        the victim's blocks back to the pool and requeues it at the front;
+        :meth:`admit` re-admits it sized for prompt + already-generated
+        tokens (the recompute re-prefill needs them all stored again).
+    """
+
+    kv: PagedKVCache
+    max_batch: int
+    policy: SchedulingPolicy = dataclasses.field(default_factory=FCFSPolicy)
+    decode_headroom: int = 8
+
+    def __post_init__(self):
+        self.waiting: List[Request] = []
+        self.running: List[Request] = []   # admission order (LIFO eviction)
+        self.n_preemptions = 0
+
+    # ---- queue management ----
+    def submit(self, reqs: Sequence[Request]) -> None:
+        self.waiting.extend(reqs)
+
+    def stored_tokens(self, req: Request) -> int:
+        """Tokens that must be in the pool for `req` to decode: the prompt
+        plus every generated token except the still-unstored last one."""
+        return len(req.prompt) + max(len(req.output) - 1, 0)
+
+    def admit(self) -> List[Request]:
+        """FCFS-prefix admission: move waiting requests to running while the
+        pool can hold their stored tokens + decode headroom. The head of the
+        queue blocks the tail (head-of-line blocking is the documented FCFS
+        trade-off — a size-aware policy can override this hook)."""
+        admitted = []
+        while self.waiting and len(self.running) < self.max_batch:
+            req = self.waiting[0]
+            need = self.stored_tokens(req) + self.decode_headroom
+            if not self.kv.can_allocate(need):
+                break
+            self.waiting.pop(0)
+            self.kv.allocate(req.rid, self.stored_tokens(req))
+            req.state = State.RUNNING
+            self.running.append(req)
+            admitted.append(req)
+        return admitted
+
+    def preempt(self, req: Request) -> int:
+        """Evict `req`: free its blocks back to the pool and requeue it at
+        the FRONT of the waiting queue (preempted requests have priority).
+        Returns the number of blocks freed."""
+        freed = len(self.kv.tables[req.rid])
+        self.kv.free_seq(req.rid)
+        self.running.remove(req)
+        req.state = State.PREEMPTED
+        self.waiting.insert(0, req)
+        self.n_preemptions += 1
+        return freed
 
     def retire_finished(self) -> List[Request]:
         done = [r for r in self.running if r.state == State.FINISHED]
