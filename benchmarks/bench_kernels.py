@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import time_call
-from repro.kernels import ops, ref
+from repro.kernels import ref
 
 
 def run():

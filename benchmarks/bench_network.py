@@ -6,7 +6,6 @@ A real CPU-measured column times jax device-to-device copies as the
 in-container stand-in for the wire (documented as illustrative only)."""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from benchmarks.common import time_call

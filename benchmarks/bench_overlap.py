@@ -10,11 +10,9 @@ The `exactness` rows execute the repo's real overlapped attention
 the correctness side of the ablation."""
 from __future__ import annotations
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import registry
 from repro.core import costmodel as cm

@@ -77,6 +77,8 @@ def run(quick: bool = False):
                 f"lamina_ttft_p90_ms={lam['ttft_p90_s']*1e3:.1f};"
                 f"lamina_tbt_p50_ms={lam['tbt_p50_s']*1e3:.1f};"
                 f"lamina_tbt_p90_ms={lam['tbt_p90_s']*1e3:.1f};"
+                f"blocks_shared={lam['blocks_shared']};"
+                f"prefill_tokens_skipped={lam['prefill_tokens_skipped']};"
                 f"outputs_identical=True"),
         })
     return rows

@@ -29,6 +29,7 @@ MODULES = [
     ("kernels_micro", "benchmarks.bench_kernels"),
     ("paged_attention", "benchmarks.bench_paged_attention"),
     ("block_sharded_attention", "benchmarks.bench_block_sharding"),
+    ("prefix_sharing", "benchmarks.bench_prefix_sharing"),
     ("sec7_extensions", "benchmarks.bench_extensions"),
 ]
 

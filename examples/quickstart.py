@@ -3,12 +3,14 @@ corpus, then generate with the serving stack's unified ``LLMEngine`` —
 submit a prompt, get a streaming ``RequestHandle``, and watch tokens arrive
 as they are decoded over the paged KV pool (the same facade that serves the
 disaggregated placements; here it runs the ``homogeneous`` baseline).
+``EngineConfig(prefix_sharing=True)`` additionally maps identical prompt
+prefixes onto shared refcounted KV blocks (copy-on-write on divergence) —
+greedy outputs are bit-identical either way.
 
   PYTHONPATH=src python examples/quickstart.py [--arch tinyllama-1.1b]
 """
 import argparse
 
-import jax
 
 from repro.configs import registry
 from repro.data.synthetic import packed_batches

@@ -9,11 +9,9 @@ import argparse
 import os
 import tempfile
 
-import jax
 
 from repro.configs import registry
 from repro.data.synthetic import packed_batches
-from repro.models import transformer
 from repro.training import checkpoint as ckpt
 from repro.training import optimizer as opt
 from repro.training.train_loop import train

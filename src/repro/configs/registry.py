@@ -3,9 +3,9 @@ per-arch input-shape applicability (DESIGN.md §4)."""
 from __future__ import annotations
 
 import importlib
-from typing import Dict, List, Optional
+from typing import List, Optional
 
-from repro.configs.base import INPUT_SHAPES, input_specs, reduced
+from repro.configs.base import reduced
 from repro.models.common import ModelConfig
 
 _MODULES = {

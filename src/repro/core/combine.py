@@ -13,7 +13,7 @@ kernel over KV blocks in VMEM. We carry the running max `m` alongside
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

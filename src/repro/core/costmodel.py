@@ -15,7 +15,6 @@ artifacts (launch/roofline.py).
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Dict, Optional, Tuple
 
 from repro.models.common import ModelConfig

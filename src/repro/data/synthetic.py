@@ -4,7 +4,7 @@ so training examples demonstrate real learning without external datasets.
 Includes sequence packing with document boundaries."""
 from __future__ import annotations
 
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator
 
 import numpy as np
 

@@ -7,7 +7,6 @@ switch with ``DisaggConfig.decode_backend``.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -33,6 +33,11 @@ def main() -> None:
                     choices=["head", "block", "request"])
     ap.add_argument("--scheduler", default="fcfs",
                     choices=["fcfs", "preempt"])
+    ap.add_argument("--prefix-sharing", action="store_true",
+                    help="refcounted prompt-prefix sharing: map identical "
+                         "full prompt blocks onto one set of physical KV "
+                         "blocks (copy-on-write on divergence) and skip "
+                         "their prefill")
     ap.add_argument("--backend", default="jnp", choices=["jnp", "pallas"])
     ap.add_argument("--events", action="store_true",
                     help="print the iteration-level lifecycle event stream")
@@ -58,7 +63,7 @@ def main() -> None:
         expert_workers=args.expert_workers,
         max_batch=args.max_batch, num_blocks=args.num_blocks,
         scheduler=args.scheduler, decode_backend=args.backend,
-        seed=args.seed)
+        prefix_sharing=args.prefix_sharing, seed=args.seed)
     eng = LLMEngine(cfg, params, econf)
     eng.submit(reqs)
     if args.events:
@@ -74,6 +79,11 @@ def main() -> None:
           f"throughput={s['throughput_tok_s']:.1f} tok/s "
           f"mean_tbt={s['mean_tbt_s']*1000:.1f} ms "
           f"preemptions={s['preemptions']}")
+    if args.prefix_sharing:
+        print(f"prefix_sharing blocks_shared={s['blocks_shared']} "
+              f"prefill_tokens_skipped={s['prefill_tokens_skipped']} "
+              f"cow_forks={eng.kv.cow_forks} "
+              f"used_blocks={eng.kv.used_blocks}")
     print(f"ttft_ms p50={s['ttft_p50_s']*1e3:.1f} "
           f"p90={s['ttft_p90_s']*1e3:.1f} p99={s['ttft_p99_s']*1e3:.1f}  "
           f"tbt_ms p50={s['tbt_p50_s']*1e3:.1f} "

@@ -9,13 +9,12 @@ sliding-window variant) and attention-logit soft-capping.
 """
 from __future__ import annotations
 
-import functools
 from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.models.common import ModelConfig, apply_rope, dense_init, softcap
+from repro.models.common import ModelConfig, apply_rope, dense_init
 
 NEG_INF = -1e30
 
@@ -405,20 +404,34 @@ def decode_attention_jnp(q, k_cache, v_cache, cache_len, *,
 # ---------------------------------------------------------------------------
 def attention_forward(params, cfg: ModelConfig, x: jax.Array,
                       positions: jax.Array, *, is_local: bool = False,
-                      block_size: int = 512) -> jax.Array:
+                      block_size: int = 512,
+                      prefix_kv: Optional[Tuple[jax.Array, jax.Array]] = None
+                      ) -> jax.Array:
     """Full-sequence attention (train / prefill). x: (B, S, d).
 
     ``is_local`` is STATIC: alternating local/global stacks (gemma2) scan over
     layer *pairs* so each variant is traced once with its own static window.
-    """
+
+    ``prefix_kv``: optional HEAD-MAJOR (B, Hkv, P, hd) K/V of an already-
+    cached prompt prefix (the prefix-sharing suffix prefill). `x` then holds
+    only the suffix tokens and `positions` their global positions (P + i);
+    queries attend over concat(prefix, suffix) keys. Because every softmax
+    row is computed over the same keys in the same scan order as a full
+    prefill, suffix outputs are BIT-IDENTICAL to the corresponding rows of
+    the unsliced prefill. Returned k/v cover the suffix only."""
     q, k, v = qkv_project(params, cfg, x, positions)
     window = cfg.sliding_window if (is_local or not cfg.local_global) else 0
+    k_all, v_all = k, v
+    if prefix_kv is not None:
+        pk, pv = prefix_kv           # head-major -> seq-major for blockwise
+        k_all = jnp.concatenate([jnp.swapaxes(pk, 1, 2), k], axis=1)
+        v_all = jnp.concatenate([jnp.swapaxes(pv, 1, 2), v], axis=1)
     # unrolled lowering (roofline cost pass) uses larger KV blocks so the
     # fully-unrolled chunk count stays small
     if cfg.lower_unrolled:
         block_size = max(block_size, x.shape[1] // 8)
     out = blockwise_attention(
-        q, k, v, causal=True, sliding_window=int(window),
+        q, k_all, v_all, causal=True, sliding_window=int(window),
         attention_sinks=cfg.attention_sinks if window else 0,
         logit_softcap=cfg.attn_logit_softcap, q_positions=positions,
         block_size=block_size, unroll=cfg.lower_unrolled)

@@ -16,7 +16,7 @@ from repro.models.attention import (attention_decode_step,
                                     attention_decode_step_paged,
                                     attention_forward, blockwise_attention,
                                     init_attention, out_project, qkv_project)
-from repro.models.common import ModelConfig, dense_init, rms_norm
+from repro.models.common import ModelConfig, rms_norm
 from repro.models.ffn import ffn_forward, init_ffn
 from repro.models.moe import init_moe, moe_forward
 
@@ -44,9 +44,12 @@ def init_dense_block(key, cfg: ModelConfig, use_moe: bool = False) -> Dict:
 def dense_block(params: Dict, cfg: ModelConfig, x: jax.Array, *,
                 mode: str, positions: Optional[jax.Array] = None,
                 cache: Optional[Dict] = None, is_local: bool = False,
-                backend: str = "jnp",
-                moe_group_size: int = 256) -> Tuple[jax.Array, Dict, jax.Array]:
-    """Returns (x, new_cache_entries, aux_loss)."""
+                backend: str = "jnp", moe_group_size: int = 256,
+                prefix_kv: Optional[Tuple[jax.Array, jax.Array]] = None
+                ) -> Tuple[jax.Array, Dict, jax.Array]:
+    """Returns (x, new_cache_entries, aux_loss). ``prefix_kv`` (prefill
+    only): this layer's head-major (B, Hkv, P, hd) K/V of an already-cached
+    prompt prefix — see ``attention_forward``."""
     h = rms_norm(x, params["norm1"], cfg.norm_eps)
     new_cache: Dict = {}
     if mode == "decode":
@@ -63,7 +66,7 @@ def dense_block(params: Dict, cfg: ModelConfig, x: jax.Array, *,
         new_cache = {"k_new": k_new, "v_new": v_new}
     else:
         attn, k, v = attention_forward(params["attn"], cfg, h, positions,
-                                       is_local=is_local)
+                                       is_local=is_local, prefix_kv=prefix_kv)
         if mode == "prefill":
             new_cache = {"k": k, "v": v}
     if cfg.post_norms:

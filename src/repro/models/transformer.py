@@ -16,8 +16,7 @@ Per-layer params are stacked on axis 0 so every stack lowers as one
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -481,6 +480,68 @@ def prefill(params: Params, cfg: ModelConfig, batch: Dict,
         cache["len"] = jnp.full((x.shape[0],), x.shape[1], jnp.int32)
     logits = _head(params, cfg, x[:, -1])
     return logits, cache
+
+
+def prefill_suffix(params: Params, cfg: ModelConfig, batch: Dict,
+                   k_prefix: jax.Array, v_prefix: jax.Array
+                   ) -> Tuple[jax.Array, Dict]:
+    """Prefix-cached prefill: run only a prompt's unshared SUFFIX, with the
+    shared prefix's KV supplied from the paged pool — the prefix-sharing
+    engine's prefill-skip path (matched blocks are never recomputed).
+
+    batch["tokens"]: (B, S_suf) suffix tokens; k_prefix/v_prefix:
+    HEAD-MAJOR (L, B, Hkv, P, hd) — the pool layout
+    ``PagedKVCache.gather_prefix`` returns. Suffix queries attend over
+    concat(prefix, suffix) keys at global positions, so hidden states,
+    suffix KV, and last-position logits are BIT-IDENTICAL to the
+    corresponding slice of a full :func:`prefill` over prefix+suffix
+    (see ``attention_forward``). Returns (last-position logits,
+    {"k", "v", "len"}) with SUFFIX-ONLY head-major KV (L, B, Hkv, S_suf,
+    hd) and len = P + S_suf. Dense/vlm/moe stacked-layer stacks only (the
+    serving engines' families)."""
+    if cfg.family not in ("dense", "vlm", "moe"):
+        raise ValueError("prefix-cached prefill serves KV-cache dense "
+                         f"stacks; got family={cfg.family}")
+    if isinstance(params["layers"], (list, tuple)):
+        raise ValueError("prefix-cached prefill requires stacked layer "
+                         "params (per-layer buffer layout is the dry-run "
+                         "path)")
+    P = k_prefix.shape[3]
+    x, positions, _ = _embed(params, cfg, batch)
+    positions = positions + P           # suffix tokens sit at P + i
+    pair = 2 if cfg.local_global else 1
+    layers, kp, vp = params["layers"], k_prefix, v_prefix
+    if pair == 2:
+        layers, kp, vp = jax.tree.map(
+            lambda a: a.reshape((a.shape[0] // 2, 2) + a.shape[1:]),
+            (layers, kp, vp))
+
+    def body(carry, xs):
+        h, aux = carry
+        layer_p, kp_l, vp_l = xs
+        caches = []
+        for j in range(pair):
+            p = _tree_index(layer_p, j) if pair == 2 else layer_p
+            is_local = (j == 0) if cfg.local_global else False
+            h, c, a = blocks.dense_block(
+                p, cfg, h, mode="prefill", positions=positions,
+                is_local=is_local,
+                prefix_kv=(kp_l[j] if pair == 2 else kp_l,
+                           vp_l[j] if pair == 2 else vp_l))
+            caches.append(c)
+            aux = aux + a
+        ys = jax.tree.map(lambda *c: jnp.stack(c), *caches) if pair == 2 \
+            else caches[0]
+        return (h, aux), ys
+
+    (x, _), kv = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                              (layers, kp, vp), unroll=cfg.lower_unrolled)
+    if pair == 2:
+        kv = jax.tree.map(
+            lambda a: a.reshape((a.shape[0] * 2,) + a.shape[2:]), kv)
+    cache = {"k": _hm(kv["k"], 2), "v": _hm(kv["v"], 2),
+             "len": jnp.full((x.shape[0],), P + x.shape[1], jnp.int32)}
+    return _head(params, cfg, x[:, -1]), cache
 
 
 def _hm(kv: jax.Array, seq_axis: int = 1) -> jax.Array:

@@ -64,6 +64,13 @@ class EngineConfig:
     max_batch: int = 8
     scheduler: str = "fcfs"
     decode_headroom: int = 8           # tokens reserved per admitted request
+    # Refcounted prompt-prefix sharing: at admission, full blocks whose
+    # token content matches a live request's prompt prefix are MAPPED onto
+    # that donor's physical blocks (copy-on-write on divergence) and only
+    # the unshared suffix is charged against the pool / prefilled. Greedy
+    # outputs are bit-identical with this on or off; it strictly increases
+    # the concurrency a fixed pool admits for common-prefix workloads.
+    prefix_sharing: bool = False
 
     # ---- decode backend / RNG ----
     decode_backend: str = "jnp"

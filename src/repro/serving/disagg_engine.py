@@ -42,7 +42,6 @@ strategies compose.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -22,7 +22,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional
+from typing import Dict, List
 
 import jax
 import jax.numpy as jnp
@@ -31,7 +31,7 @@ import numpy as np
 from repro.models import transformer
 from repro.models.common import ModelConfig
 from repro.serving.kvcache import PagedKVCache
-from repro.serving.request import Request, SamplingParams, State
+from repro.serving.request import Request, State
 from repro.serving.sampler import sample, sample_batch
 from repro.serving.scheduler import Scheduler
 
@@ -47,6 +47,12 @@ class EngineStats:
     request_ttfts: List[float] = dataclasses.field(default_factory=list)
     request_tbts: List[float] = dataclasses.field(default_factory=list)
     preemptions: int = 0
+    # prefix sharing (LLMEngine with EngineConfig.prefix_sharing):
+    # physical blocks mapped onto a donor's at admission, and prompt tokens
+    # whose prefill COMPUTE was skipped (MoE shares memory but recomputes,
+    # so its blocks_shared can grow while prefill_tokens_skipped stays 0)
+    blocks_shared: int = 0
+    prefill_tokens_skipped: int = 0
 
     @property
     def mean_batch(self) -> float:
@@ -96,6 +102,8 @@ class EngineStats:
             "throughput_tok_s": self.throughput,
             "mean_tbt_s": self.mean_tbt,
             "preemptions": self.preemptions,
+            "blocks_shared": self.blocks_shared,
+            "prefill_tokens_skipped": self.prefill_tokens_skipped,
         }
         for name, pcts in (("ttft", self.ttft_percentiles()),
                            ("tbt", self.tbt_percentiles())):

@@ -22,12 +22,27 @@ LOCAL tables plus each slot's global base position (the §4.2.2
 partial-combine backends need true positions because a shard's walk is
 non-contiguous in the sequence).
 
+Prefix sharing / copy-on-write (refcounted blocks): identical prompt
+prefixes map multiple sequences' block tables onto the SAME physical blocks
+(``share_blocks``), so the pool admits strictly more concurrent requests
+for the same memory — the paper's scarce resource (§3, §4.2). Every block
+carries a reference count; a shared block is freed only when the last
+referencing sequence releases it, and the first divergent write into a
+shared block (``append_token`` growing into a shared partial tail, or a
+re-prefill over shared slots) triggers copy-on-write: the writer gets a
+private copy of just that block (placed by the SAME round-robin slot rule,
+so the shard-balance invariant survives forking), the donor keeps the
+original untouched.
+
 Invariants (hypothesis-tested in tests/test_kvcache.py):
-  * a block is owned by at most one sequence,
-  * free + owned == total,
+  * a block's refcount == the number of live tables referencing it,
+  * free + referenced == total (a block is free iff its refcount is zero),
+  * an UNSHARED block is owned by at most one sequence,
   * a sequence's capacity always covers its token count,
-  * freeing returns exactly the blocks that were owned,
-  * a freed block returns to the shard that owns it.
+  * freeing decrements refcounts and returns exactly the blocks that hit
+    zero, each to the shard that owns it,
+  * a writer never mutates a block another live sequence references
+    (copy-on-write forks first).
 """
 from __future__ import annotations
 
@@ -91,6 +106,19 @@ class PagedKVCache:
             list(range(s * npb, (s + 1) * npb)) for s in range(self.n_shards)]
         self.tables: Dict[int, List[int]] = {}
         self.lengths: Dict[int, int] = {}
+        # block id -> number of live tables referencing it (only blocks that
+        # are currently referenced have an entry; free blocks have none)
+        self.refcounts: Dict[int, int] = {}
+        # seq -> block ids it BORROWED via share_blocks (vs allocated
+        # itself). A borrower's prefill-write into a still-shared borrowed
+        # block copy-on-writes; the original allocator's write is the
+        # canonical fill the borrowers are waiting for (within one admission
+        # wave a recipient maps the donor's blocks BEFORE the donor's
+        # prefill has stored them) and goes through in place.
+        self._borrowed: Dict[int, set] = {}
+        # cumulative counters (benchmarks / EngineStats surface them)
+        self.blocks_shared_total = 0   # refcount bumps via share_blocks
+        self.cow_forks = 0             # copy-on-write block copies
 
     @property
     def blocks_per_shard(self) -> int:
@@ -130,46 +158,152 @@ class PagedKVCache:
             self.blocks_needed(n_tokens)
 
     def allocate(self, seq_id: int, n_tokens: int) -> None:
-        assert seq_id not in self.tables, f"seq {seq_id} already allocated"
+        """Give `seq_id` capacity for `n_tokens`. A fresh sequence gets a new
+        round-robin table; a sequence seeded by :meth:`share_blocks` is
+        EXTENDED — fresh private blocks are appended after the shared prefix
+        until capacity covers `n_tokens` (admission charges only this
+        unshared suffix against the free list)."""
+        if seq_id in self.tables:       # share_blocks seeded the table
+            assert seq_id in self._borrowed, \
+                f"seq {seq_id} already allocated (only share_blocks-seeded " \
+                f"tables may be extended)"
+            table = self.tables[seq_id]
+            assert n_tokens >= self.lengths[seq_id], \
+                f"seq {seq_id}: cannot shrink allocation"
+            need = self.blocks_needed(n_tokens) - len(table)
+            have = sum(len(s) for s in self._free_shard)
+            if need > have:
+                raise OutOfBlocks(f"need {need}, have {have}")
+            for i in range(len(table), len(table) + need):
+                b = self._pop_block(i)
+                self.refcounts[b] = 1
+                table.append(b)
+            self.lengths[seq_id] = n_tokens
+            return
         need = self.blocks_needed(n_tokens)
         have = sum(len(s) for s in self._free_shard)
         if need > have:
             raise OutOfBlocks(f"need {need}, have {have}")
         # round-robin over shards: the sequence's i-th block lands on shard
         # i mod n_shards, so its KV spans every pool chip near-evenly
-        self.tables[seq_id] = [self._pop_block(i) for i in range(need)]
+        table = [self._pop_block(i) for i in range(need)]
+        for b in table:
+            self.refcounts[b] = 1
+        self.tables[seq_id] = table
         self.lengths[seq_id] = n_tokens
+
+    def share_blocks(self, src_rid: int, dst_rid: int, n_tokens: int) -> int:
+        """Map a NEW sequence `dst_rid`'s table onto `src_rid`'s existing
+        physical blocks covering its first `n_tokens` — the prefix-sharing
+        entry point. No pool memory is consumed: the shared blocks'
+        refcounts are bumped instead. `n_tokens` need not be block-aligned:
+        a trailing partial block is shared too (the fork case — the first
+        divergent write into it copy-on-writes). Returns the number of
+        blocks shared. Extend the table afterwards with :meth:`allocate`."""
+        assert dst_rid not in self.tables, \
+            f"seq {dst_rid} already allocated — share_blocks seeds new tables"
+        if n_tokens < 1 or n_tokens > self.lengths[src_rid]:
+            raise ValueError(
+                f"share_blocks: n_tokens={n_tokens} outside donor {src_rid}'s"
+                f" stored range [1, {self.lengths[src_rid]}]")
+        shared = self.tables[src_rid][:self.blocks_needed(n_tokens)]
+        for b in shared:
+            self.refcounts[b] += 1
+        self.tables[dst_rid] = list(shared)
+        self.lengths[dst_rid] = n_tokens
+        self._borrowed[dst_rid] = set(shared)
+        self.blocks_shared_total += len(shared)
+        return len(shared)
+
+    def _cow_block(self, seq_id: int, slot: int) -> None:
+        """Copy-on-write fork of `seq_id`'s table slot: pop a private block
+        (same round-robin slot rule, so shard balance survives), copy the
+        physical tile, decrement the donor refcount. The donor's data is
+        never touched. Raises OutOfBlocks when no block is free."""
+        old = self.tables[seq_id][slot]
+        new = self._pop_block(slot)
+        self.refcounts[old] -= 1
+        self.refcounts[new] = 1
+        self.tables[seq_id][slot] = new
+        self._borrowed.get(seq_id, set()).discard(old)
+        self.k_pool = self.k_pool.at[:, :, new].set(self.k_pool[:, :, old])
+        self.v_pool = self.v_pool.at[:, :, new].set(self.v_pool[:, :, old])
+        self.cow_forks += 1
+
+    def blocks_to_append(self, seq_id: int) -> int:
+        """Fresh blocks the next :meth:`append_token` will consume: 1 when
+        the sequence must grow its table OR copy-on-write a shared tail
+        block, else 0 — the engine's pool-pressure check must count both."""
+        n = self.lengths[seq_id]
+        table = self.tables[seq_id]
+        if self.blocks_needed(n + 1) > len(table):
+            return 1
+        if self.refcounts[table[n // self.block_size]] > 1:
+            return 1
+        return 0
 
     def append_token(self, seq_id: int) -> None:
         n = self.lengths[seq_id] + 1
         table = self.tables[seq_id]
-        if self.blocks_needed(n) > len(table):
-            try:
-                table.append(self._pop_block(len(table)))
-            except OutOfBlocks:
-                free = sum(len(s) for s in self._free_shard)
-                live = sum(self.lengths.values())
-                raise PoolExhausted(
-                    f"KV pool exhausted growing request {seq_id} to token "
-                    f"{n}: {live} live tokens across {len(self.tables)} "
-                    f"sequences occupy all {self.num_blocks} blocks "
-                    f"({free} free) — preempt a victim or raise num_blocks",
-                    rid=seq_id, live_tokens=live, free_blocks=free
-                ) from None
+        try:
+            if self.blocks_needed(n) > len(table):
+                b = self._pop_block(len(table))
+                self.refcounts[b] = 1
+                table.append(b)
+            else:
+                # the new token lands in an existing block: fork it first if
+                # another live sequence still references it (shared tail)
+                slot = (n - 1) // self.block_size
+                if self.refcounts[table[slot]] > 1:
+                    self._cow_block(seq_id, slot)
+        except OutOfBlocks:
+            free = sum(len(s) for s in self._free_shard)
+            live = sum(self.lengths.values())
+            raise PoolExhausted(
+                f"KV pool exhausted growing request {seq_id} to token "
+                f"{n}: {live} live tokens across {len(self.tables)} "
+                f"sequences occupy all {self.num_blocks} blocks "
+                f"({free} free) — preempt a victim or raise num_blocks",
+                rid=seq_id, live_tokens=live, free_blocks=free
+            ) from None
         self.lengths[seq_id] = n
 
     def free_seq(self, seq_id: int) -> None:
         for b in self.tables.pop(seq_id):
-            self._free_shard[self.shard_of(b)].append(b)
+            self.refcounts[b] -= 1
+            if self.refcounts[b] == 0:
+                del self.refcounts[b]
+                self._free_shard[self.shard_of(b)].append(b)
+        self._borrowed.pop(seq_id, None)
         del self.lengths[seq_id]
 
     @property
     def used_blocks(self) -> int:
+        """PHYSICAL blocks in use — a block shared by K sequences counts
+        once (the memory actually occupied; what sharing saves)."""
         return self.num_blocks - sum(len(s) for s in self._free_shard)
 
     def utilisation(self) -> float:
         toks = sum(self.lengths.values())
         return toks / (self.num_blocks * self.block_size)
+
+    def unique_live_tokens(self, seq_ids: Optional[Sequence[int]] = None
+                           ) -> int:
+        """Live tokens over UNIQUE physical blocks — a block shared by K
+        sequences counts once, at the deepest fill any sharer reaches (the
+        residency/ideal-DMA accounting; ``sum(lengths)`` double-counts
+        shared prefixes)."""
+        if seq_ids is None:
+            seq_ids = list(self.tables)
+        per_block: Dict[int, int] = {}
+        bs = self.block_size
+        for sid in seq_ids:
+            length = self.lengths[sid]
+            for j, g in enumerate(self.tables[sid]):
+                t = min(bs, max(0, length - j * bs))
+                if t > per_block.get(g, 0):
+                    per_block[g] = t
+        return sum(per_block.values())
 
     # ---------------- hot-path views ----------------
     def block_table_batch(self, seq_ids: Sequence[int]
@@ -201,18 +335,34 @@ class PagedKVCache:
             slot·block_size — anchor the causal/window/sink masks.
           * shard_tokens (n_shards, B) int32 — live tokens per (shard, seq):
             the per-chip KV-read accounting (round-robin placement keeps
-            max−min ≤ block_size for any single sequence).
+            max−min ≤ block_size for any single sequence). A PHYSICAL block
+            shared by several sequences in the batch is counted ONCE, for
+            the first sequence that references it — a prefix-shared block
+            lives on whatever shard the donor placed it and its bytes are
+            resident (and streamable) once per chip, not once per sharer.
         """
         B = len(seq_ids)
         n, npb, bs = self.n_shards, self.blocks_per_shard, self.block_size
         per = [[[] for _ in range(B)] for _ in range(n)]  # (local id, base)
         shard_tokens = np.zeros((n, B), np.int32)
-        for i, sid in enumerate(seq_ids):
+        # deepest fill across sharers, same rule as shard_live_tokens /
+        # unique_live_tokens (a partial tail shared at different depths is
+        # resident at the donor's deeper fill regardless of batch order)
+        fill: Dict[int, int] = {}
+        for sid in seq_ids:
             length = self.lengths[sid]
+            for j, g in enumerate(self.tables[sid]):
+                t = min(bs, max(0, length - j * bs))
+                if t > fill.get(g, 0):
+                    fill[g] = t
+        counted: set = set()
+        for i, sid in enumerate(seq_ids):
             for j, g in enumerate(self.tables[sid]):
                 s = self.shard_of(g)
                 per[s][i].append((g - s * npb, j * bs))
-                shard_tokens[s, i] += min(bs, max(0, length - j * bs))
+                if g not in counted:
+                    counted.add(g)
+                    shard_tokens[s, i] += fill[g]
         nbl = max([1] + [len(per[s][i]) for s in range(n) for i in range(B)])
         local_tables = np.zeros((n, B, nbl), np.int32)
         local_positions = np.full((n, B, nbl), POS_PAD, np.int32)
@@ -226,48 +376,79 @@ class PagedKVCache:
     def shard_live_tokens(self, seq_ids: Optional[Sequence[int]] = None
                           ) -> np.ndarray:
         """(n_shards,) live tokens held per pool shard (all sequences by
-        default) — the per-chip KV balance the block benchmark reports."""
+        default) — the per-chip KV balance the block benchmark reports.
+        A shared physical block counts once, at the deepest fill any sharer
+        reaches (residency, not per-sequence reads)."""
         if seq_ids is None:
             seq_ids = list(self.tables)
         totals = np.zeros((self.n_shards,), np.int64)
         bs = self.block_size
+        per_block: Dict[int, int] = {}
         for sid in seq_ids:
             length = self.lengths[sid]
             for j, g in enumerate(self.tables[sid]):
-                totals[self.shard_of(g)] += min(bs, max(0, length - j * bs))
+                t = min(bs, max(0, length - j * bs))
+                if t > per_block.get(g, 0):
+                    per_block[g] = t
+        for g, t in per_block.items():
+            totals[self.shard_of(g)] += t
         return totals
 
     # ---------------- data movement ----------------
-    def write_prefill(self, seq_id: int, k: jax.Array, v: jax.Array) -> None:
+    def write_prefill(self, seq_id: int, k: jax.Array, v: jax.Array,
+                      start_token: int = 0) -> None:
         """k/v: HEAD-MAJOR (L, Hkv, S, hd) for this sequence's prompt — the
-        prefill cache layout, stored without any transpose."""
+        prefill cache layout, stored without any transpose.
+
+        ``start_token`` (block-aligned) writes the slice starting at that
+        position — the prefix-sharing path prefills only the unshared
+        suffix, leaving the shared prefix blocks untouched. A re-prefill
+        into a still-shared BORROWED block copy-on-write-forks it first (a
+        divergent write must never corrupt the donor); a write by the
+        block's original allocator goes through in place — it is the
+        canonical fill recipients that shared within the same admission
+        wave are waiting on."""
+        if start_token % self.block_size:
+            raise ValueError(
+                f"write_prefill start_token ({start_token}) must be "
+                f"block-aligned (block_size={self.block_size})")
         S = k.shape[2]
         table = self.tables[seq_id]
-        if S > len(table) * self.block_size:
+        if start_token + S > len(table) * self.block_size:
             free = sum(len(s) for s in self._free_shard)
             live = sum(self.lengths.values())
             raise PoolExhausted(
-                f"request {seq_id}: write_prefill of {S} tokens exceeds its "
-                f"allocated {len(table)} blocks × {self.block_size} "
-                f"(= {len(table) * self.block_size} tokens); pool holds "
-                f"{live} live tokens with {free} of {self.num_blocks} "
-                f"blocks free — allocate() must cover the prompt first",
-                rid=seq_id, live_tokens=live, free_blocks=free)
-        pad = len(table) * self.block_size - S
+                f"request {seq_id}: write_prefill of {S} tokens at "
+                f"{start_token} exceeds its allocated {len(table)} blocks × "
+                f"{self.block_size} (= {len(table) * self.block_size} "
+                f"tokens); pool holds {live} live tokens with {free} of "
+                f"{self.num_blocks} blocks free — allocate() must cover the "
+                f"prompt first", rid=seq_id, live_tokens=live,
+                free_blocks=free)
+        b0 = start_token // self.block_size
+        nb = self.blocks_needed(S)
+        borrowed = self._borrowed.get(seq_id, ())
+        for slot in range(b0, b0 + nb):
+            if table[slot] in borrowed and self.refcounts[table[slot]] > 1:
+                self._cow_block(seq_id, slot)
+        pad = nb * self.block_size - S
         if pad:
             k = jnp.pad(k, [(0, 0), (0, 0), (0, pad), (0, 0)])
             v = jnp.pad(v, [(0, 0), (0, 0), (0, pad), (0, 0)])
-        kb = k.reshape(k.shape[0], k.shape[1], len(table), self.block_size,
+        kb = k.reshape(k.shape[0], k.shape[1], nb, self.block_size,
                        k.shape[3])
         vb = v.reshape(*kb.shape)
-        idx = jnp.asarray(table)
+        idx = jnp.asarray(table[b0:b0 + nb])
         self.k_pool = self.k_pool.at[:, :, idx].set(kb)
         self.v_pool = self.v_pool.at[:, :, idx].set(vb)
 
     def write_token(self, seq_id: int, k: jax.Array, v: jax.Array,
                     position: int) -> None:
         """k/v: (L, Hkv, hd) for one token at `position` (0-based)."""
-        blk = self.tables[seq_id][position // self.block_size]
+        slot = position // self.block_size
+        if self.refcounts[self.tables[seq_id][slot]] > 1:
+            self._cow_block(seq_id, slot)      # never write a donor's block
+        blk = self.tables[seq_id][slot]
         off = position % self.block_size
         self.k_pool = self.k_pool.at[:, :, blk, off].set(k)
         self.v_pool = self.v_pool.at[:, :, blk, off].set(v)
@@ -277,7 +458,13 @@ class PagedKVCache:
         """Batched scatter of one token per sequence — the decode step's
         single pool write. k_new/v_new: (L, B, Hkv, hd) as produced by the
         model's decode updates; positions: per-sequence 0-based slots
-        (the pre-append lengths). Replaces the per-sequence host loop."""
+        (the pre-append lengths). Replaces the per-sequence host loop.
+        Shared targets copy-on-write first (``append_token`` normally forked
+        already — this is the allocator-level guarantee)."""
+        for sid, p in zip(seq_ids, positions):
+            slot = p // self.block_size
+            if self.refcounts[self.tables[sid][slot]] > 1:
+                self._cow_block(sid, slot)
         blk = jnp.asarray([self.tables[sid][p // self.block_size]
                            for sid, p in zip(seq_ids, positions)], jnp.int32)
         off = jnp.asarray([p % self.block_size for p in positions], jnp.int32)
@@ -285,6 +472,24 @@ class PagedKVCache:
         vn = jnp.swapaxes(v_new, 1, 2)
         self.k_pool = self.k_pool.at[:, :, blk, off].set(kn)
         self.v_pool = self.v_pool.at[:, :, blk, off].set(vn)
+
+    def gather_prefix(self, seq_id: int, n_tokens: int
+                      ) -> Tuple[jax.Array, jax.Array]:
+        """HEAD-MAJOR (L, Hkv, n_tokens, hd) K/V of this sequence's first
+        `n_tokens` (block-aligned) — the context operand of the prefix-
+        cached suffix prefill. One gather per ADMISSION (not per decode
+        step), so the no-densify invariant on the decode hot path holds."""
+        if n_tokens % self.block_size:
+            raise ValueError(
+                f"gather_prefix n_tokens ({n_tokens}) must be block-aligned "
+                f"(block_size={self.block_size})")
+        nb = n_tokens // self.block_size
+        idx = jnp.asarray(self.tables[seq_id][:nb])
+        L, Hkv = self.k_pool.shape[0], self.k_pool.shape[1]
+        hd = self.k_pool.shape[4]
+        k = self.k_pool[:, :, idx].reshape(L, Hkv, n_tokens, hd)
+        v = self.v_pool[:, :, idx].reshape(L, Hkv, n_tokens, hd)
+        return k, v
 
     def gather(self, seq_ids: List[int], pad_len: int
                ) -> Tuple[jax.Array, jax.Array, jax.Array]:

@@ -144,12 +144,29 @@ class LLMEngine:
         self.placement: PlacementStrategy = make_placement(cfg, econf)
         self.policy = make_policy(econf.scheduler)
         self.sched = RequestScheduler(self.kv, econf.max_batch, self.policy,
-                                      econf.decode_headroom)
+                                      econf.decode_headroom,
+                                      prefix_sharing=econf.prefix_sharing)
         self.stats = EngineStats()
         self._decode_jit = jax.jit(self.placement.decode_fn())
         self._prefill_jit = jax.jit(
             lambda p, b: transformer.prefill(p, cfg, b,
                                              max_seq=b["tokens"].shape[1]))
+        def _suffix_prefill(p, b, k_pool, v_pool, idx):
+            # fused prefix gather: the shared blocks' KV is sliced out of
+            # the pool INSIDE the jitted program (one compiled gather, no
+            # eager dispatch / host round-trip per admission)
+            L, Hkv, _, bs, hd = k_pool.shape
+            kp = k_pool[:, :, idx].reshape(L, Hkv, idx.shape[0] * bs, hd)
+            vp = v_pool[:, :, idx].reshape(L, Hkv, idx.shape[0] * bs, hd)
+            return transformer.prefill_suffix(p, cfg, b, kp[:, None],
+                                              vp[:, None])
+        self._prefill_suffix_jit = jax.jit(_suffix_prefill)
+        # Prefill COMPUTE can only be skipped when suffix-only prefill is
+        # bit-identical to the full one. MoE capacity dispatch couples the
+        # tokens of a routing group (expert capacity and reduction shapes
+        # depend on the whole group), so MoE models share pool MEMORY but
+        # recompute the full prompt, writing only the unshared suffix.
+        self._skip_prefill_compute = cfg.family != "moe"
         self._events: List[EngineEvent] = []
         self._step_no = 0
 
@@ -255,10 +272,7 @@ class LLMEngine:
     # prefill / recompute
     # ------------------------------------------------------------------
     def _prefill(self, req: Request) -> None:
-        toks = jnp.asarray([req.prompt], jnp.int32)
-        logits, cache = self._prefill_jit(self.params, {"tokens": toks})
-        # cache k/v are head-major (L, 1, Hkv, S, hd) — the pool's layout
-        self.kv.write_prefill(req.rid, cache["k"][:, 0], cache["v"][:, 0])
+        logits = self._prefill_known(req.rid, req.prompt)
         tok = self._sample([req], logits)
         req.record_token(int(tok[0]))
         # the sampled token's K/V gets stored by the next decode pass (it is
@@ -268,11 +282,50 @@ class LLMEngine:
         """Re-admission of a preempted request: rebuild its pool KV by
         re-prefilling prompt + generated tokens minus the still-unstored
         last one (the next decode input) — the §5 recovery path. No token
-        is sampled: the stream continues from ``req.output[-1]``."""
+        is sampled: the stream continues from ``req.output[-1]``. Prefix
+        sharing applies here too: a readmitted request whose prompt prefix
+        matched a live donor at re-admission skips those blocks."""
         known = req.prompt + req.output[:-1]
-        toks = jnp.asarray([known], jnp.int32)
-        _, cache = self._prefill_jit(self.params, {"tokens": toks})
-        self.kv.write_prefill(req.rid, cache["k"][:, 0], cache["v"][:, 0])
+        self._prefill_known(req.rid, known)
+
+    def _prefill_known(self, rid: int, known: Sequence[int]) -> jax.Array:
+        """Compute and store pool KV for `known` tokens, honouring the
+        prefix the scheduler mapped onto a donor's blocks at admission.
+        Returns the last position's logits.
+
+        With a shared prefix: the matched blocks' KV is already resident
+        (bit-identical — the donor stored the same tokens at the same
+        positions), so only the suffix runs through the model
+        (``transformer.prefill_suffix`` attends suffix queries over the
+        gathered prefix context) and only the suffix is written. MoE
+        recomputes the full prompt (see ``_skip_prefill_compute``) but
+        still writes only the suffix — the donor's blocks are never
+        rewritten, so no copy-on-write fires and the memory stays shared.
+        """
+        shared = self.sched.shared_prefix_tokens(rid)
+        # increment-based (like prefill_tokens_skipped below) so a stats
+        # reset mid-engine-lifetime stays consistent; the allocator's
+        # kv.blocks_shared_total keeps the engine-lifetime cumulative view
+        self.stats.blocks_shared += shared // self.kv.block_size
+        if shared and self._skip_prefill_compute:
+            idx = jnp.asarray(
+                self.kv.tables[rid][:shared // self.kv.block_size], jnp.int32)
+            toks = jnp.asarray([list(known[shared:])], jnp.int32)
+            logits, cache = self._prefill_suffix_jit(
+                self.params, {"tokens": toks}, self.kv.k_pool,
+                self.kv.v_pool, idx)
+            # suffix cache k/v are head-major (L, 1, Hkv, S-shared, hd)
+            self.kv.write_prefill(rid, cache["k"][:, 0], cache["v"][:, 0],
+                                  start_token=shared)
+            self.stats.prefill_tokens_skipped += shared
+            return logits
+        toks = jnp.asarray([list(known)], jnp.int32)
+        logits, cache = self._prefill_jit(self.params, {"tokens": toks})
+        # cache k/v are head-major (L, 1, Hkv, S, hd) — the pool's layout
+        self.kv.write_prefill(rid, cache["k"][:, 0, :, shared:],
+                              cache["v"][:, 0, :, shared:],
+                              start_token=shared)
+        return logits
 
     # ------------------------------------------------------------------
     # decode
@@ -314,14 +367,15 @@ class LLMEngine:
     def _resolve_pool_pressure(self, running: List[Request]
                                ) -> List[Request]:
         """Ensure every running sequence can store one more token. Each
-        grower needs exactly one fresh block; when the pool can't cover
-        them, the policy evicts victims (blocks freed back to the pool,
-        re-admission via recompute) or — non-preemptible — the engine
-        surfaces the allocator's PoolExhausted signal up front instead of
-        stranding the pool mid-iteration."""
+        grower needs exactly one fresh block — because its table must grow
+        OR because its tail block is shared and the divergent append will
+        copy-on-write (``blocks_to_append`` counts both); when the pool
+        can't cover them, the policy evicts victims (blocks freed back to
+        the pool, re-admission via recompute) or — non-preemptible — the
+        engine surfaces the allocator's PoolExhausted signal up front
+        instead of stranding the pool mid-iteration."""
         def needs_block(r: Request) -> bool:
-            return self.kv.blocks_needed(self.kv.lengths[r.rid] + 1) > \
-                len(self.kv.tables[r.rid])
+            return self.kv.blocks_to_append(r.rid) > 0
 
         while True:
             growers = [r for r in running if needs_block(r)]

@@ -25,8 +25,7 @@ verbatim as the greedy-parity oracle for the facade's tests;
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Dict, Optional
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

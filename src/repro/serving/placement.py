@@ -192,12 +192,16 @@ class AttentionPoolPlacement(PlacementStrategy):
             lt, lp, shard_tokens = kv.block_table_shards(ids)
             pool.log_paged_kv(shard_tokens.sum(axis=1), L)
             return (jnp.asarray(lt), jnp.asarray(lp))
+        # byte accounting counts a prefix-SHARED physical block once (its
+        # bytes are resident, and streamable, once per chip — not once per
+        # sharer): unique_live_tokens dedupes; without sharing it equals
+        # the plain per-sequence length sum
         if pool.partition == "head":
-            total = sum(kv.lengths[i] for i in ids)
+            total = kv.unique_live_tokens(ids)
             pool.log_paged_kv([total] * pool.n, L,
                               kv_head_fraction=1.0 / pool.n)
         else:  # request: each worker walks only its requests' tables
-            toks = [sum(kv.lengths[ids[i]] for i in idx)
+            toks = [kv.unique_live_tokens([ids[i] for i in idx])
                     for idx in np.array_split(np.arange(len(ids)), pool.n)]
             pool.log_paged_kv(toks, L)
         return ()

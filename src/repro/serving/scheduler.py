@@ -25,7 +25,8 @@ Preempted requests re-enter at the FRONT of the waiting queue.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Protocol, Sequence, runtime_checkable
+from typing import (Dict, List, Optional, Protocol, Sequence, Set, Tuple,
+                    runtime_checkable)
 
 from repro.serving.kvcache import PagedKVCache
 from repro.serving.request import Request, State
@@ -138,6 +139,75 @@ def make_policy(name: str) -> SchedulingPolicy:
                          f"choose from {sorted(POLICIES)}") from None
 
 
+# ======================================================================
+# Prefix sharing (block-granular prompt-prefix index)
+# ======================================================================
+
+class PrefixIndex:
+    """Block-granular prompt-prefix trie consulted at admission.
+
+    Nodes are keyed by the token-content CHAIN of the first i full blocks —
+    ``key_i = (key_{i-1}, tuple(prompt[i·bs:(i+1)·bs]))`` — so lookup is
+    exact (dict equality on the token tuples; hashes only route buckets, a
+    collision can never alias two different prefixes). A node records which
+    LIVE requests hold a physical block with that content at that table
+    slot; any of them can donate (``PagedKVCache.share_blocks`` maps the
+    new request's table onto the donor's blocks and bumps refcounts).
+
+    Only FULL blocks are indexed: a partial tail block is never shared at
+    admission (the allocator's copy-on-write handles partial-tail sharing
+    for explicit forks). Registrants are removed on retire AND on preempt —
+    an evicted request's table is gone, so it can no longer donate (its
+    blocks survive through the refcounts of any sharer that remains).
+    """
+
+    def __init__(self, block_size: int):
+        self.block_size = block_size
+        self._nodes: Dict[Tuple, Set[int]] = {}
+        self._keys_of: Dict[int, List[Tuple]] = {}
+
+    def _chain(self, prompt: Sequence[int]):
+        key: Tuple = ()
+        bs = self.block_size
+        for i in range(len(prompt) // bs):
+            key = (key, tuple(prompt[i * bs:(i + 1) * bs]))
+            yield key
+
+    def register(self, rid: int, prompt: Sequence[int]) -> None:
+        """Index every full prompt block of a just-admitted request."""
+        keys = []
+        for key in self._chain(prompt):
+            self._nodes.setdefault(key, set()).add(rid)
+            keys.append(key)
+        if keys:
+            self._keys_of[rid] = keys
+
+    def unregister(self, rid: int) -> None:
+        for key in self._keys_of.pop(rid, ()):
+            rids = self._nodes.get(key)
+            if rids is not None:
+                rids.discard(rid)
+                if not rids:
+                    del self._nodes[key]
+
+    def match(self, prompt: Sequence[int]) -> Tuple[Optional[int], int]:
+        """Deepest indexed block-aligned prefix of `prompt`: returns
+        (donor rid, matched tokens) — (None, 0) when nothing matches.
+        The donor is the smallest rid at the deepest node (deterministic);
+        its table covers every shallower block too."""
+        donor, matched = None, 0
+        for i, key in enumerate(self._chain(prompt)):
+            rids = self._nodes.get(key)
+            if not rids:
+                break
+            donor = min(rids)
+            matched = (i + 1) * self.block_size
+        return donor, matched
+
+    def __len__(self) -> int:
+        return len(self._nodes)
+
+
 @dataclasses.dataclass
 class RequestScheduler:
     """Queue + KV-pool bookkeeping behind ``LLMEngine``.
@@ -148,18 +218,31 @@ class RequestScheduler:
       * preempted requests are supported end to end: :meth:`preempt` frees
         the victim's blocks back to the pool and requeues it at the front;
         :meth:`admit` re-admits it sized for prompt + already-generated
-        tokens (the recompute re-prefill needs them all stored again).
+        tokens (the recompute re-prefill needs them all stored again);
+      * with ``prefix_sharing`` a :class:`PrefixIndex` is consulted in
+        :meth:`admit`: a waiting request whose prompt starts with full
+        blocks already resident (another live request's identical prompt
+        prefix) is mapped onto those physical blocks
+        (``PagedKVCache.share_blocks``) and admission charges only the
+        UNSHARED suffix against the free list — the same pool memory
+        admits strictly more concurrent requests. The engine reads
+        :meth:`shared_prefix_tokens` to slice the prompt before prefill
+        (matched blocks are never recomputed).
     """
 
     kv: PagedKVCache
     max_batch: int
     policy: SchedulingPolicy = dataclasses.field(default_factory=FCFSPolicy)
     decode_headroom: int = 8
+    prefix_sharing: bool = False
 
     def __post_init__(self):
         self.waiting: List[Request] = []
         self.running: List[Request] = []   # admission order (LIFO eviction)
         self.n_preemptions = 0
+        self.prefix_index: Optional[PrefixIndex] = (
+            PrefixIndex(self.kv.block_size) if self.prefix_sharing else None)
+        self._shared: Dict[int, int] = {}  # rid -> shared prefix tokens
 
     # ---- queue management ----
     def submit(self, reqs: Sequence[Request]) -> None:
@@ -170,30 +253,72 @@ class RequestScheduler:
         plus every generated token except the still-unstored last one."""
         return len(req.prompt) + max(len(req.output) - 1, 0)
 
+    def shared_prefix_tokens(self, rid: int) -> int:
+        """Block-aligned prompt tokens this running request shares with a
+        donor (0 without prefix sharing). The engine's prefill/recompute
+        slices these off the prompt — their KV is already in the pool."""
+        return self._shared.get(rid, 0)
+
+    def _match_prefix(self, req: Request, stored: int
+                      ) -> Tuple[Optional[int], int]:
+        """Deepest usable prefix match for `req`: capped one block short of
+        `stored` tokens so at least one token is left to prefill (the last
+        prompt token's logits seed sampling; a recompute needs a non-empty
+        suffix too)."""
+        if self.prefix_index is None:
+            return None, 0
+        donor, matched = self.prefix_index.match(req.prompt)
+        bs = self.kv.block_size
+        matched = min(matched, ((stored - 1) // bs) * bs)
+        if donor is None or matched <= 0:
+            return None, 0
+        return donor, matched
+
     def admit(self) -> List[Request]:
         """FCFS-prefix admission: move waiting requests to running while the
         pool can hold their stored tokens + decode headroom. The head of the
         queue blocks the tail (head-of-line blocking is the documented FCFS
-        trade-off — a size-aware policy can override this hook)."""
+        trade-off — a size-aware policy can override this hook). With prefix
+        sharing, only the unshared suffix is charged against the pool."""
         admitted = []
         while self.waiting and len(self.running) < self.max_batch:
             req = self.waiting[0]
-            need = self.stored_tokens(req) + self.decode_headroom
-            if not self.kv.can_allocate(need):
+            stored = self.stored_tokens(req)
+            donor, shared = self._match_prefix(req, stored)
+            if not self.kv.can_allocate(stored - shared +
+                                        self.decode_headroom):
                 break
             self.waiting.pop(0)
-            self.kv.allocate(req.rid, self.stored_tokens(req))
+            if shared:
+                self.kv.share_blocks(donor, req.rid, shared)
+            self.kv.allocate(req.rid, stored)
+            self._shared[req.rid] = shared
+            if self.prefix_index is not None:
+                self.prefix_index.register(req.rid, req.prompt)
             req.state = State.RUNNING
             self.running.append(req)
             admitted.append(req)
         return admitted
 
+    def _release(self, rid: int) -> None:
+        """Drop a request's pool blocks (refcount-aware) and its prefix-
+        index registrations — retire and preempt share this path. A block
+        another live request still references survives (refcount > 0);
+        evicting a sharer can therefore never corrupt its donor or
+        recipients."""
+        self.kv.free_seq(rid)
+        self._shared.pop(rid, None)
+        if self.prefix_index is not None:
+            self.prefix_index.unregister(rid)
+
     def preempt(self, req: Request) -> int:
-        """Evict `req`: free its blocks back to the pool and requeue it at
-        the FRONT of the waiting queue (preempted requests have priority).
-        Returns the number of blocks freed."""
-        freed = len(self.kv.tables[req.rid])
-        self.kv.free_seq(req.rid)
+        """Evict `req`: release its block refs (physical blocks return to
+        the pool only when no other live request still references them) and
+        requeue it at the FRONT of the waiting queue (preempted requests
+        have priority). Returns the number of physical blocks freed."""
+        free_before = sum(len(s) for s in self.kv._free_shard)
+        self._release(req.rid)
+        freed = sum(len(s) for s in self.kv._free_shard) - free_before
         self.running.remove(req)
         req.state = State.PREEMPTED
         self.waiting.insert(0, req)
@@ -203,7 +328,7 @@ class RequestScheduler:
     def retire_finished(self) -> List[Request]:
         done = [r for r in self.running if r.state == State.FINISHED]
         for r in done:
-            self.kv.free_seq(r.rid)
+            self._release(r.rid)
         self.running = [r for r in self.running if r.state != State.FINISHED]
         return done
 

@@ -5,9 +5,12 @@ import os
 import subprocess
 import sys
 
+import pytest
+
 ROOT = os.path.join(os.path.dirname(__file__), "..")
 
 
+@pytest.mark.slow  # CI's smoke job runs `benchmarks.run --quick` directly
 def test_quick_mode_runs_every_registered_benchmark():
     env = dict(os.environ, PYTHONPATH=os.pathsep.join(
         [os.path.join(ROOT, "src"), ROOT]))

@@ -1,7 +1,6 @@
 """Property tests for the §4.2.2 partial-softmax combine identity — the
 mathematical core of attention offloading, the flash-decode kernel, and the
 sequence-parallel sharding."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 from _hypothesis_compat import given, settings, st

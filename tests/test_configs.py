@@ -1,6 +1,5 @@
 """Config/registry coverage: input_specs builds for every applicable
 (arch x shape); long_500k applicability matrix matches DESIGN.md §4."""
-import jax
 import pytest
 
 from repro.configs import registry

@@ -173,6 +173,7 @@ def test_block_partition_matches_baseline_engine(setup):
     assert sum(e2.pool.per_worker_kv_bytes) > 0
 
 
+@pytest.mark.slow
 def test_block_partition_long_request_spans_all_shards(setup):
     """The block partition's raison d'être: ONE long request's KV spans
     every attention worker, per-shard live tokens within one block of even

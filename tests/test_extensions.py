@@ -177,7 +177,6 @@ def test_int8_kv_memory_accounting():
     from repro.core import costmodel as cm
     cfg = registry.get_config("gemma2-27b")
     per_tok_bf16 = cm.kv_bytes_per_token(cfg)
-    hd = cfg.resolved_head_dim
     per_tok_int8 = per_tok_bf16 / 2 + 2 * 4 * cfg.num_layers * \
         cfg.num_kv_heads  # + fp32 scales
     assert per_tok_int8 < 0.6 * per_tok_bf16
@@ -186,6 +185,7 @@ def test_int8_kv_memory_accounting():
 # ---------------------------------------------------------------------------
 # speculative decoding (paper §8 related work) — greedy-exact variant
 # ---------------------------------------------------------------------------
+@pytest.mark.slow
 def test_speculative_equals_greedy():
     from repro.serving.speculative import (greedy_generate,
                                            speculative_generate)

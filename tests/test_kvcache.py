@@ -1,5 +1,4 @@
 """Paged KV cache: hypothesis-driven allocator invariants + data movement."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -183,6 +182,211 @@ def test_freed_blocks_return_to_owner_shard():
     for s, free in enumerate(kv._free_shard):
         assert len(free) == npb
         assert all(b // npb == s for b in free)
+
+
+# ---------------------------------------------------------------------------
+# Prefix sharing: refcounts, share_blocks, copy-on-write
+# ---------------------------------------------------------------------------
+def _check_ref_invariants(kv):
+    """The refcount invariants that replace exclusive ownership."""
+    refs = {}
+    for t in kv.tables.values():
+        for b in t:
+            refs[b] = refs.get(b, 0) + 1
+    assert refs == kv.refcounts, "refcount != live table references"
+    assert len(refs) + len(kv.free) == kv.num_blocks, "blocks leaked"
+    assert set(refs).isdisjoint(kv.free)
+    npb = kv.blocks_per_shard
+    for s in range(kv.n_shards):
+        assert all(b // npb == s for b in kv._free_shard[s])
+    for sid, ln in kv.lengths.items():
+        assert len(kv.tables[sid]) * kv.block_size >= ln
+
+
+def test_share_blocks_refcounts_and_free_order():
+    kv = _cache(num_blocks=16, block_size=4)
+    kv.allocate(0, 10)                       # 3 blocks
+    assert kv.share_blocks(0, 1, 8) == 2     # 2 full blocks, no pool cost
+    assert kv.used_blocks == 3               # physical, shared counted once
+    assert [kv.refcounts[b] for b in kv.tables[0]] == [2, 2, 1]
+    assert kv.tables[1] == kv.tables[0][:2]
+    kv.allocate(1, 14)                       # extend: 2 shared + 2 private
+    assert len(kv.tables[1]) == 4 and kv.used_blocks == 5
+    _check_ref_invariants(kv)
+    # donor frees first: shared blocks survive through the recipient
+    donor_blocks = list(kv.tables[0])
+    kv.free_seq(0)
+    assert kv.refcounts[donor_blocks[0]] == 1
+    assert donor_blocks[2] in kv.free        # donor-private block released
+    assert donor_blocks[0] not in kv.free
+    _check_ref_invariants(kv)
+    kv.free_seq(1)
+    assert len(kv.free) == kv.num_blocks
+    assert kv.refcounts == {}
+
+
+def test_share_blocks_validates_range_and_double_alloc():
+    kv = _cache(num_blocks=8, block_size=4)
+    kv.allocate(0, 6)
+    with pytest.raises(ValueError):
+        kv.share_blocks(0, 1, 7)             # beyond donor's stored tokens
+    with pytest.raises(ValueError):
+        kv.share_blocks(0, 1, 0)
+    kv.share_blocks(0, 1, 4)
+    with pytest.raises(AssertionError):
+        kv.share_blocks(0, 1, 4)             # dst already allocated
+
+
+def test_cow_fork_parity_vs_unshared_oracle():
+    """Fork a sequence at a NON-aligned point (partial tail shared), let
+    both sides append divergent tokens: pool contents must match two
+    independent caches written with the same data, and the donor's bytes
+    must never change."""
+    cfg = registry.get_smoke_config("llama3-8b")
+    L, Hkv, hd = cfg.num_layers, cfg.num_kv_heads, cfg.resolved_head_dim
+    rng = np.random.default_rng(5)
+
+    def tok(seed):
+        r = np.random.default_rng(seed)
+        return (jnp.asarray(r.standard_normal((L, Hkv, hd)), cfg.dtype),
+                jnp.asarray(r.standard_normal((L, Hkv, hd)), cfg.dtype))
+
+    shared = PagedKVCache(cfg, 16, 4)
+    oracle = PagedKVCache(cfg, 16, 4)
+    n0 = 6                                   # 1 full block + 2-token tail
+    k = jnp.asarray(rng.standard_normal((L, Hkv, n0, hd)), cfg.dtype)
+    v = jnp.asarray(rng.standard_normal((L, Hkv, n0, hd)), cfg.dtype)
+    shared.allocate(0, n0)
+    shared.write_prefill(0, k, v)
+    shared.share_blocks(0, 1, n0)            # fork: partial tail shared too
+    assert shared.used_blocks == 2
+    oracle.allocate(0, n0)
+    oracle.write_prefill(0, k, v)
+    oracle.allocate(1, n0)
+    oracle.write_prefill(1, k, v)
+    # both sides diverge: different tokens at position 6. The FIRST writer
+    # needs a fresh block (CoW fork); afterwards the tail is private on
+    # both sides and the second write goes in place.
+    for i, (sid, seed) in enumerate(((0, 10), (1, 11))):
+        for kvc in (shared, oracle):
+            expect = 1 if (kvc is shared and i == 0) else 0
+            assert kvc.blocks_to_append(sid) == expect
+            kvc.append_token(sid)
+            ka, va = tok(seed)
+            kvc.write_token(sid, ka, va, n0)
+    assert shared.cow_forks == 1             # exactly the partial tail
+    assert shared.used_blocks == 3           # full block still shared once
+    _check_ref_invariants(shared)
+    for sid in (0, 1):
+        ks, vs, _ = shared.gather([sid], 8)
+        ko, vo, _ = oracle.gather([sid], 8)
+        np.testing.assert_array_equal(np.asarray(ks), np.asarray(ko))
+        np.testing.assert_array_equal(np.asarray(vs), np.asarray(vo))
+
+
+def test_borrower_prefill_cow_never_corrupts_donor():
+    """A borrower re-prefilling over still-shared blocks (divergent write)
+    forks them; the donor's bytes are untouched. The ORIGINAL allocator's
+    write goes through in place — it is the canonical fill recipients that
+    shared within the same admission wave are waiting on."""
+    cfg = registry.get_smoke_config("llama3-8b")
+    L, Hkv, hd = cfg.num_layers, cfg.num_kv_heads, cfg.resolved_head_dim
+    rng = np.random.default_rng(6)
+    kv = _cache(num_blocks=16, block_size=4)
+    kv.allocate(0, 8)
+    kv.share_blocks(0, 1, 8)                 # borrow BEFORE the donor fill
+    k0 = jnp.asarray(rng.standard_normal((L, Hkv, 8, hd)), cfg.dtype)
+    v0 = jnp.asarray(rng.standard_normal((L, Hkv, 8, hd)), cfg.dtype)
+    kv.write_prefill(0, k0, v0)              # donor fill: NO fork, in place
+    assert kv.cow_forks == 0
+    assert kv.tables[1] == kv.tables[0]
+    # borrower diverges with a full re-prefill: fork, donor intact
+    k1 = jnp.asarray(rng.standard_normal((L, Hkv, 8, hd)), cfg.dtype)
+    v1 = jnp.asarray(rng.standard_normal((L, Hkv, 8, hd)), cfg.dtype)
+    kv.write_prefill(1, k1, v1)
+    assert kv.cow_forks == 2
+    assert set(kv.tables[1]).isdisjoint(kv.tables[0])
+    kd, vd, _ = kv.gather([0], 8)
+    np.testing.assert_array_equal(
+        np.asarray(kd[:, 0]), np.asarray(jnp.swapaxes(k0, 1, 2)))
+    kb, _, _ = kv.gather([1], 8)
+    np.testing.assert_array_equal(
+        np.asarray(kb[:, 0]), np.asarray(jnp.swapaxes(k1, 1, 2)))
+    _check_ref_invariants(kv)
+
+
+def test_gather_prefix_roundtrips_write_prefill():
+    """gather_prefix returns the head-major (L, Hkv, P, hd) prefix exactly
+    as write_prefill stored it — the layout contract the engine's fused
+    suffix-prefill gather (LLMEngine._suffix_prefill) relies on — and a
+    recipient's gather through SHARED blocks sees the donor's bytes."""
+    cfg = registry.get_smoke_config("llama3-8b")
+    L, Hkv, hd = cfg.num_layers, cfg.num_kv_heads, cfg.resolved_head_dim
+    rng = np.random.default_rng(9)
+    kv = _cache(num_blocks=16, block_size=4)
+    kv.allocate(0, 11)
+    k = jnp.asarray(rng.standard_normal((L, Hkv, 11, hd)), cfg.dtype)
+    v = jnp.asarray(rng.standard_normal((L, Hkv, 11, hd)), cfg.dtype)
+    kv.write_prefill(0, k, v)
+    kv.share_blocks(0, 1, 8)
+    kp, vp = kv.gather_prefix(1, 8)          # through the SHARED table
+    assert kp.shape == (L, Hkv, 8, hd)
+    np.testing.assert_array_equal(np.asarray(kp), np.asarray(k[:, :, :8]))
+    np.testing.assert_array_equal(np.asarray(vp), np.asarray(v[:, :, :8]))
+    with pytest.raises(ValueError, match="block-aligned"):
+        kv.gather_prefix(0, 6)
+
+
+def test_shared_accounting_counts_physical_blocks_once():
+    kv = _sharded_cache(num_blocks=32, block_size=4, n_shards=4)
+    kv.allocate(0, 16)                       # 4 blocks round-robin
+    kv.share_blocks(0, 1, 16)
+    kv.allocate(1, 20)                       # +1 private block
+    assert kv.used_blocks == 5
+    assert kv.unique_live_tokens() == 20
+    assert int(kv.shard_live_tokens().sum()) == 20
+    lt, lp, st_ = kv.block_table_shards([0, 1])
+    assert int(st_.sum()) == 20              # shared blocks counted once
+    # per-sequence tables still BOTH walk the shared blocks (reads)
+    assert lt.shape[1] == 2
+    # partial-tail share (fork): resident tokens use the DEEPEST fill among
+    # sharers regardless of batch order — same rule everywhere
+    kv2 = _cache(num_blocks=16, block_size=4)
+    kv2.allocate(0, 6)
+    kv2.share_blocks(0, 1, 5)
+    for order in ([0, 1], [1, 0]):
+        _, _, st2 = kv2.block_table_shards(order)
+        assert int(st2.sum()) == 6
+    assert kv2.unique_live_tokens() == 6
+    assert int(kv2.shard_live_tokens().sum()) == 6
+
+
+@settings(deadline=None, max_examples=30)
+@given(ops=st.lists(
+    st.tuples(st.sampled_from(["alloc", "append", "free", "share"]),
+              st.integers(0, 5), st.integers(1, 30)),
+    min_size=1, max_size=80))
+def test_refcount_invariants_under_interleaved_share_append_free(ops):
+    """The tentpole's allocator invariant: arbitrary interleavings of
+    allocate / share_blocks / append_token (CoW) / free_seq keep refcounts
+    exactly equal to live table references, never leak or double-free a
+    block, and keep every free block in its owner shard's list."""
+    kv = _sharded_cache(num_blocks=32, block_size=4, n_shards=2)
+    for kind, sid, n in ops:
+        try:
+            if kind == "alloc" and sid not in kv.tables:
+                kv.allocate(sid, n)
+            elif kind == "append" and sid in kv.tables:
+                kv.append_token(sid)
+            elif kind == "free" and sid in kv.tables:
+                kv.free_seq(sid)
+            elif kind == "share" and sid in kv.tables:
+                dst = (sid + 1) % 6
+                if dst not in kv.tables and n <= kv.lengths[sid]:
+                    kv.share_blocks(sid, dst, n)
+        except OutOfBlocks:
+            pass
+        _check_ref_invariants(kv)
 
 
 @settings(deadline=None, max_examples=20)

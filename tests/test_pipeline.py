@@ -2,7 +2,6 @@
 for swept (n, steps) and the executable rotation demo."""
 import jax
 import numpy as np
-import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.configs import registry

@@ -9,6 +9,10 @@ from _hypothesis_compat import given, settings, st
 from repro.configs import registry
 from repro.core import converter, costmodel as cm
 
+# hypothesis-heavy sweeps: CI's blocking matrix skips them (-m "not slow");
+# the non-blocking slow job still runs the file on every PR
+pytestmark = pytest.mark.slow
+
 
 # ---------------------------------------------------------------------------
 # cost model

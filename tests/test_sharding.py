@@ -1,14 +1,12 @@
 """Sharding-level tests on 8 fake host devices (subprocess-isolated so the
 main pytest process keeps its single real device), plus spec-building
 checks that run in-process on full-size configs via eval_shape."""
-import json
 import os
 import subprocess
 import sys
 import textwrap
 
 import jax
-import pytest
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
