@@ -79,6 +79,8 @@ def run(quick: bool = False):
                 f"lamina_tbt_p90_ms={lam['tbt_p90_s']*1e3:.1f};"
                 f"blocks_shared={lam['blocks_shared']};"
                 f"prefill_tokens_skipped={lam['prefill_tokens_skipped']};"
+                f"prefill_chunks_run={lam['prefill_chunks_run']};"
+                f"max_prefill_slab_tokens={lam['max_prefill_slab_tokens']};"
                 f"outputs_identical=True"),
         })
     return rows

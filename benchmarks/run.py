@@ -30,6 +30,7 @@ MODULES = [
     ("paged_attention", "benchmarks.bench_paged_attention"),
     ("block_sharded_attention", "benchmarks.bench_block_sharding"),
     ("prefix_sharing", "benchmarks.bench_prefix_sharing"),
+    ("chunked_prefill", "benchmarks.bench_chunked_prefill"),
     ("sec7_extensions", "benchmarks.bench_extensions"),
 ]
 

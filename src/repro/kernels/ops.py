@@ -13,6 +13,7 @@ import jax.numpy as jnp
 
 from repro.kernels import decode_attention as _da
 from repro.kernels import paged_decode_attention as _pda
+from repro.kernels import paged_prefill_attention as _ppa
 from repro.kernels import rwkv6_scan as _rw
 from repro.kernels import ssm_scan as _ssm
 
@@ -31,6 +32,32 @@ def decode_attention(q, k_cache, v_cache, cache_len, *, block_k: int = 512,
                                logit_softcap=logit_softcap,
                                interpret=_INTERPRET)
     return out.reshape(B, H, hd)
+
+
+def paged_prefill_chunk_attention(q, k_pool, v_pool, block_table,
+                                  k_chunk, v_chunk, *, backend: str = "jnp",
+                                  sliding_window: int = 0,
+                                  attention_sinks: int = 0,
+                                  logit_softcap: float = 0.0):
+    """Paged-context chunk-prefill attention — backend dispatch.
+
+    One prefill chunk's queries ``q (C, H, hd)`` (positions [P, P+C), with
+    P = len(block_table)·block_size tokens already written to the pool)
+    attend over the prefix pool blocks plus the in-chunk causal mask
+    (``k_chunk/v_chunk (C, Hkv, hd)`` are this chunk's freshly projected
+    K/V). 'pallas' streams the prefix HBM→VMEM through the block table in
+    place — peak context memory O(block); 'jnp' is the gather reference
+    whose math is bit-identical to the corresponding rows of a one-shot
+    prefill (the serving engines' default path — see
+    ``kernels/paged_prefill_attention.py``)."""
+    kw = dict(sliding_window=sliding_window, attention_sinks=attention_sinks,
+              logit_softcap=logit_softcap)
+    if backend == "pallas":
+        return _ppa.paged_prefill_chunk_attention(
+            q, k_pool, v_pool, block_table, k_chunk, v_chunk,
+            interpret=_INTERPRET, **kw)
+    return _ppa.paged_prefill_chunk_attention_jnp(
+        q, k_pool, v_pool, block_table, k_chunk, v_chunk, **kw)
 
 
 def rwkv6_scan(r, k, v, w, u, *, chunk: int = 128):

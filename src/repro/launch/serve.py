@@ -38,6 +38,11 @@ def main() -> None:
                          "full prompt blocks onto one set of physical KV "
                          "blocks (copy-on-write on divergence) and skip "
                          "their prefill")
+    ap.add_argument("--prefill-chunk-tokens", type=int, default=0,
+                    help="chunked paged prefill: per-iteration prefill "
+                         "token budget (a multiple of the block size; at "
+                         "most one chunk runs per engine step alongside "
+                         "the full decode batch). 0 = one-shot prefill")
     ap.add_argument("--backend", default="jnp", choices=["jnp", "pallas"])
     ap.add_argument("--events", action="store_true",
                     help="print the iteration-level lifecycle event stream")
@@ -63,7 +68,9 @@ def main() -> None:
         expert_workers=args.expert_workers,
         max_batch=args.max_batch, num_blocks=args.num_blocks,
         scheduler=args.scheduler, decode_backend=args.backend,
-        prefix_sharing=args.prefix_sharing, seed=args.seed)
+        prefix_sharing=args.prefix_sharing,
+        prefill_chunk_tokens=args.prefill_chunk_tokens or None,
+        seed=args.seed)
     eng = LLMEngine(cfg, params, econf)
     eng.submit(reqs)
     if args.events:
@@ -79,6 +86,10 @@ def main() -> None:
           f"throughput={s['throughput_tok_s']:.1f} tok/s "
           f"mean_tbt={s['mean_tbt_s']*1000:.1f} ms "
           f"preemptions={s['preemptions']}")
+    if args.prefill_chunk_tokens:
+        print(f"chunked_prefill chunk_tokens={args.prefill_chunk_tokens} "
+              f"prefill_chunks_run={s['prefill_chunks_run']} "
+              f"max_prefill_slab_tokens={s['max_prefill_slab_tokens']}")
     if args.prefix_sharing:
         print(f"prefix_sharing blocks_shared={s['blocks_shared']} "
               f"prefill_tokens_skipped={s['prefill_tokens_skipped']} "

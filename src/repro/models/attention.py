@@ -405,8 +405,10 @@ def decode_attention_jnp(q, k_cache, v_cache, cache_len, *,
 def attention_forward(params, cfg: ModelConfig, x: jax.Array,
                       positions: jax.Array, *, is_local: bool = False,
                       block_size: int = 512,
-                      prefix_kv: Optional[Tuple[jax.Array, jax.Array]] = None
-                      ) -> jax.Array:
+                      prefix_kv: Optional[Tuple[jax.Array, jax.Array]] = None,
+                      paged_prefix: Optional[Tuple[jax.Array, jax.Array,
+                                                   jax.Array]] = None,
+                      backend: str = "jnp") -> jax.Array:
     """Full-sequence attention (train / prefill). x: (B, S, d).
 
     ``is_local`` is STATIC: alternating local/global stacks (gemma2) scan over
@@ -418,9 +420,37 @@ def attention_forward(params, cfg: ModelConfig, x: jax.Array,
     queries attend over concat(prefix, suffix) keys. Because every softmax
     row is computed over the same keys in the same scan order as a full
     prefill, suffix outputs are BIT-IDENTICAL to the corresponding rows of
-    the unsliced prefill. Returned k/v cover the suffix only."""
+    the unsliced prefill. Returned k/v cover the suffix only.
+
+    ``paged_prefix``: the PAGED form of the same contract — this layer's
+    ``(k_pool, v_pool, block_table)``: head-major pool slices
+    (Hkv, num_blocks, bs, hd) plus the sequence's first ``nb`` block ids
+    (P = nb·bs). Requires B == 1 (the serving prefill shape). With
+    ``backend="pallas"`` the prefix is streamed straight from the pool
+    (``ops.paged_prefill_chunk_attention`` — no dense gather); the jnp
+    backend gathers this one layer's prefix dense (the reference copy) and
+    falls into the ``prefix_kv`` concat path, staying bit-identical to the
+    one-shot prefill. Mutually exclusive with ``prefix_kv``."""
     q, k, v = qkv_project(params, cfg, x, positions)
     window = cfg.sliding_window if (is_local or not cfg.local_global) else 0
+    if paged_prefix is not None:
+        assert prefix_kv is None, "pass prefix_kv OR paged_prefix, not both"
+        if x.shape[0] != 1:
+            raise ValueError("paged_prefix serves the per-request prefill "
+                             f"shape (B == 1); got B={x.shape[0]}")
+        kp_pool, vp_pool, table = paged_prefix
+        if backend == "pallas":
+            from repro.kernels import ops
+            out = ops.paged_prefill_chunk_attention(
+                q[0], kp_pool, vp_pool, table, k[0], v[0], backend="pallas",
+                sliding_window=int(window),
+                attention_sinks=cfg.attention_sinks if window else 0,
+                logit_softcap=cfg.attn_logit_softcap)[None]
+            return out_project(params, out), k, v
+        Hkv, _, bs, hd = kp_pool.shape
+        P = table.shape[0] * bs
+        prefix_kv = (kp_pool[:, table].reshape(Hkv, P, hd)[None],
+                     vp_pool[:, table].reshape(Hkv, P, hd)[None])
     k_all, v_all = k, v
     if prefix_kv is not None:
         pk, pv = prefix_kv           # head-major -> seq-major for blockwise

@@ -45,11 +45,15 @@ def dense_block(params: Dict, cfg: ModelConfig, x: jax.Array, *,
                 mode: str, positions: Optional[jax.Array] = None,
                 cache: Optional[Dict] = None, is_local: bool = False,
                 backend: str = "jnp", moe_group_size: int = 256,
-                prefix_kv: Optional[Tuple[jax.Array, jax.Array]] = None
+                prefix_kv: Optional[Tuple[jax.Array, jax.Array]] = None,
+                paged_prefix: Optional[Tuple[jax.Array, jax.Array,
+                                             jax.Array]] = None
                 ) -> Tuple[jax.Array, Dict, jax.Array]:
     """Returns (x, new_cache_entries, aux_loss). ``prefix_kv`` (prefill
     only): this layer's head-major (B, Hkv, P, hd) K/V of an already-cached
-    prompt prefix — see ``attention_forward``."""
+    prompt prefix; ``paged_prefix`` the paged form — this layer's
+    (k_pool, v_pool, block_table) read in place (chunked prefill) — see
+    ``attention_forward``."""
     h = rms_norm(x, params["norm1"], cfg.norm_eps)
     new_cache: Dict = {}
     if mode == "decode":
@@ -66,7 +70,9 @@ def dense_block(params: Dict, cfg: ModelConfig, x: jax.Array, *,
         new_cache = {"k_new": k_new, "v_new": v_new}
     else:
         attn, k, v = attention_forward(params["attn"], cfg, h, positions,
-                                       is_local=is_local, prefix_kv=prefix_kv)
+                                       is_local=is_local, prefix_kv=prefix_kv,
+                                       paged_prefix=paged_prefix,
+                                       backend=backend)
         if mode == "prefill":
             new_cache = {"k": k, "v": v}
     if cfg.post_norms:

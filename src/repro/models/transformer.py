@@ -544,6 +544,87 @@ def prefill_suffix(params: Params, cfg: ModelConfig, batch: Dict,
     return _head(params, cfg, x[:, -1]), cache
 
 
+def prefill_chunk(params: Params, cfg: ModelConfig, batch: Dict,
+                  k_pool: jax.Array, v_pool: jax.Array,
+                  prefix_blocks: jax.Array, *, backend: str = "jnp"
+                  ) -> Tuple[jax.Array, Dict]:
+    """Chunked paged prefill: run ONE block-aligned chunk of a prompt, its
+    queries attending over the ALREADY-WRITTEN pool blocks plus the
+    in-chunk causal mask — the generalisation of :func:`prefill_suffix`
+    where the prefix context stays paged (and may be empty: an all-zero-
+    block ``prefix_blocks`` of shape (0,) is the first chunk of a fresh
+    prompt, equivalent to a plain :func:`prefill` over the chunk).
+
+    batch["tokens"]: (1, C) — the chunk's tokens (B must be 1, the serving
+    prefill shape); k_pool/v_pool: HEAD-MAJOR (L, Hkv, num_blocks, bs, hd)
+    — the PagedKVCache pools by reference; prefix_blocks: (nb,) int32 pool
+    ids of this sequence's first nb blocks, all fully written
+    (P = nb·bs tokens). Chunk queries sit at global positions [P, P+C).
+
+    On the jnp backend each layer gathers its own prefix slice dense (peak
+    context slab O(P) for ONE layer, not L·P) and runs the same blockwise
+    scan as a one-shot prefill, so hidden states, chunk KV, and
+    last-position logits are BIT-IDENTICAL to the corresponding slice of a
+    full :func:`prefill` over prefix+chunk; ``backend="pallas"`` streams
+    the prefix straight from the pool (no densify — see
+    ``kernels/paged_prefill_attention.py``). Returns (last-position logits,
+    {"k", "v", "len"}) with CHUNK-ONLY head-major KV (L, 1, Hkv, C, hd) and
+    len = P + C — the slab ``PagedKVCache.write_prefill_chunk`` scatters.
+
+    Dense/vlm/moe stacked-layer stacks only. NOTE: for MoE families the
+    chunk boundary changes capacity-dispatch groups, so chunked outputs are
+    NOT bit-stable against the one-shot prefill — the serving engine runs
+    MoE prompts one-shot (same reason prefix sharing recomputes them)."""
+    if cfg.family not in ("dense", "vlm", "moe"):
+        raise ValueError("chunked paged prefill serves KV-cache dense "
+                         f"stacks; got family={cfg.family}")
+    if isinstance(params["layers"], (list, tuple)):
+        raise ValueError("chunked paged prefill requires stacked layer "
+                         "params (per-layer buffer layout is the dry-run "
+                         "path)")
+    if batch["tokens"].shape[0] != 1:
+        raise ValueError("chunked paged prefill is per-request (B == 1); "
+                         f"got B={batch['tokens'].shape[0]}")
+    bs = k_pool.shape[3]
+    P = prefix_blocks.shape[0] * bs
+    x, positions, _ = _embed(params, cfg, batch)
+    positions = positions + P           # chunk tokens sit at P + i
+    pair = 2 if cfg.local_global else 1
+    layers, kp, vp = params["layers"], k_pool, v_pool
+    if pair == 2:
+        layers, kp, vp = jax.tree.map(
+            lambda a: a.reshape((a.shape[0] // 2, 2) + a.shape[1:]),
+            (layers, kp, vp))
+
+    def body(carry, xs):
+        h, aux = carry
+        layer_p, kp_l, vp_l = xs
+        caches = []
+        for j in range(pair):
+            p = _tree_index(layer_p, j) if pair == 2 else layer_p
+            is_local = (j == 0) if cfg.local_global else False
+            h, c, a = blocks.dense_block(
+                p, cfg, h, mode="prefill", positions=positions,
+                is_local=is_local, backend=backend,
+                paged_prefix=(kp_l[j] if pair == 2 else kp_l,
+                              vp_l[j] if pair == 2 else vp_l,
+                              prefix_blocks))
+            caches.append(c)
+            aux = aux + a
+        ys = jax.tree.map(lambda *c: jnp.stack(c), *caches) if pair == 2 \
+            else caches[0]
+        return (h, aux), ys
+
+    (x, _), kv = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                              (layers, kp, vp), unroll=cfg.lower_unrolled)
+    if pair == 2:
+        kv = jax.tree.map(
+            lambda a: a.reshape((a.shape[0] * 2,) + a.shape[2:]), kv)
+    cache = {"k": _hm(kv["k"], 2), "v": _hm(kv["v"], 2),
+             "len": jnp.full((x.shape[0],), P + x.shape[1], jnp.int32)}
+    return _head(params, cfg, x[:, -1]), cache
+
+
 def _hm(kv: jax.Array, seq_axis: int = 1) -> jax.Array:
     """(…, S, Hkv, hd) -> head-major (…, Hkv, S, hd)."""
     return jnp.swapaxes(kv, seq_axis, seq_axis + 1)

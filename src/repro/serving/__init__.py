@@ -25,9 +25,10 @@ from repro.serving.llm_engine import (EngineEvent, LLMEngine, RequestHandle,
 from repro.serving.placement import PlacementStrategy, make_placement
 from repro.serving.request import Request, SamplingParams, State
 from repro.serving.sampler import request_key, sample_per_request
-from repro.serving.scheduler import (FCFSPolicy, PreemptingPolicy,
-                                     PrefixIndex, RequestScheduler,
-                                     SchedulingPolicy, make_policy)
+from repro.serving.scheduler import (ChunkedPrefillPolicy, FCFSPolicy,
+                                     PreemptingPolicy, PrefixIndex,
+                                     RequestScheduler, SchedulingPolicy,
+                                     make_policy)
 
 __all__ = [
     "EngineConfig", "EngineStats", "EngineEvent", "LLMEngine",
@@ -35,6 +36,6 @@ __all__ = [
     "make_placement", "Request", "SamplingParams", "State",
     "PagedKVCache", "OutOfBlocks", "PoolExhausted",
     "request_key", "sample_per_request",
-    "FCFSPolicy", "PreemptingPolicy", "PrefixIndex", "RequestScheduler",
-    "SchedulingPolicy", "make_policy",
+    "ChunkedPrefillPolicy", "FCFSPolicy", "PreemptingPolicy", "PrefixIndex",
+    "RequestScheduler", "SchedulingPolicy", "make_policy",
 ]

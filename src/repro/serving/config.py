@@ -71,6 +71,19 @@ class EngineConfig:
     # outputs are bit-identical with this on or off; it strictly increases
     # the concurrency a fixed pool admits for common-prefix workloads.
     prefix_sharing: bool = False
+    # Chunked paged prefill: split every prompt into block-aligned chunks of
+    # at most this many tokens; each engine iteration runs AT MOST ONE chunk
+    # alongside the full decode batch (this is the per-iteration prefill
+    # token budget), the chunk's KV is written into the pool as it
+    # completes (blocks allocated incrementally), and admission charges
+    # only the first chunk — so peak prefill memory is O(chunk) instead of
+    # O(prompt), long prompts stop head-of-line-blocking running decodes,
+    # and a prompt larger than the currently-free pool is admitted and
+    # completes as earlier requests retire. Greedy outputs are
+    # bit-identical with chunking on or off. None = one-shot prefill.
+    # (MoE models run one-shot regardless: a chunk boundary changes
+    # capacity-dispatch groups, the same reason prefix sharing recomputes.)
+    prefill_chunk_tokens: Optional[int] = None
 
     # ---- decode backend / RNG ----
     decode_backend: str = "jnp"
@@ -98,6 +111,18 @@ class EngineConfig:
                                  f"got {getattr(self, field)}")
         if self.decode_headroom < 0:
             raise ValueError("decode_headroom must be >= 0")
+        if self.prefill_chunk_tokens is not None:
+            if self.prefill_chunk_tokens < 1:
+                raise ValueError(
+                    f"prefill_chunk_tokens must be >= 1 (or None for "
+                    f"one-shot prefill); got {self.prefill_chunk_tokens}")
+            if self.prefill_chunk_tokens % self.block_size:
+                raise ValueError(
+                    f"prefill_chunk_tokens ({self.prefill_chunk_tokens}) "
+                    f"must be a multiple of block_size ({self.block_size}) "
+                    f"— every chunk boundary except the prompt's final "
+                    f"partial block must be block-aligned so chunk KV "
+                    f"scatters into whole pool blocks")
         if self.kv_shards is not None and self.kv_shards < 1:
             raise ValueError(f"kv_shards must be >= 1 (or None to derive); "
                              f"got {self.kv_shards}")

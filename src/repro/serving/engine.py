@@ -53,6 +53,13 @@ class EngineStats:
     # so its blocks_shared can grow while prefill_tokens_skipped stays 0)
     blocks_shared: int = 0
     prefill_tokens_skipped: int = 0
+    # chunked paged prefill (LLMEngine with EngineConfig.prefill_chunk_
+    # tokens): chunk model calls run, and the largest dense KV slab one
+    # prefill call materialised before scattering it into the pool (tokens)
+    # — bounded by the chunk size when chunking is on, by the longest
+    # prompt when off (the admission-capping transient the tentpole kills)
+    prefill_chunks_run: int = 0
+    max_prefill_slab_tokens: int = 0
 
     @property
     def mean_batch(self) -> float:
@@ -104,6 +111,8 @@ class EngineStats:
             "preemptions": self.preemptions,
             "blocks_shared": self.blocks_shared,
             "prefill_tokens_skipped": self.prefill_tokens_skipped,
+            "prefill_chunks_run": self.prefill_chunks_run,
+            "max_prefill_slab_tokens": self.max_prefill_slab_tokens,
         }
         for name, pcts in (("ttft", self.ttft_percentiles()),
                            ("tbt", self.tbt_percentiles())):

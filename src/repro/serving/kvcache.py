@@ -119,6 +119,15 @@ class PagedKVCache:
         # cumulative counters (benchmarks / EngineStats surface them)
         self.blocks_shared_total = 0   # refcount bumps via share_blocks
         self.cow_forks = 0             # copy-on-write block copies
+        # memoised gather indices, keyed by the CONTENT of the gathered
+        # table slice (the physical block-id tuple): a prefix-sharing
+        # admission wave's K sharers map onto the same donor blocks, so
+        # they hit one entry instead of K host->device conversions, and a
+        # chunked prefill reuses its growing prefix without rebuilding the
+        # array each chunk. Content keys can never go stale — the value is
+        # a pure function of the ids (CoW/free/realloc just miss or alias
+        # harmlessly); the dict is cleared when it outgrows its cap.
+        self._gather_idx_cache: Dict[Tuple[int, ...], jax.Array] = {}
 
     @property
     def blocks_per_shard(self) -> int:
@@ -128,6 +137,13 @@ class PagedKVCache:
     def free(self) -> List[int]:
         """All free block ids (flattened across shards) — read-only view."""
         return [b for shard in self._free_shard for b in shard]
+
+    @property
+    def num_free(self) -> int:
+        """Count of free blocks — O(shards), unlike ``len(self.free)``
+        which materialises every id (the per-iteration pressure checks
+        run this on the serving hot loop)."""
+        return sum(len(s) for s in self._free_shard)
 
     def shard_of(self, block_id: int) -> int:
         return block_id // self.blocks_per_shard
@@ -159,14 +175,14 @@ class PagedKVCache:
 
     def allocate(self, seq_id: int, n_tokens: int) -> None:
         """Give `seq_id` capacity for `n_tokens`. A fresh sequence gets a new
-        round-robin table; a sequence seeded by :meth:`share_blocks` is
-        EXTENDED — fresh private blocks are appended after the shared prefix
-        until capacity covers `n_tokens` (admission charges only this
-        unshared suffix against the free list)."""
-        if seq_id in self.tables:       # share_blocks seeded the table
-            assert seq_id in self._borrowed, \
-                f"seq {seq_id} already allocated (only share_blocks-seeded " \
-                f"tables may be extended)"
+        round-robin table; an EXISTING sequence is EXTENDED — fresh private
+        blocks are appended until capacity covers `n_tokens`. Extension
+        serves both admission flavours: a table seeded by
+        :meth:`share_blocks` grows past its shared prefix (admission charges
+        only the unshared suffix against the free list), and a CHUNKED
+        prefill grows its table incrementally, one chunk's blocks per engine
+        iteration, so peak up-front allocation is O(chunk) not O(prompt)."""
+        if seq_id in self.tables:       # extend (share-seeded or chunked)
             table = self.tables[seq_id]
             assert n_tokens >= self.lengths[seq_id], \
                 f"seq {seq_id}: cannot shrink allocation"
@@ -425,6 +441,20 @@ class PagedKVCache:
                 f"{self.num_blocks} blocks free — allocate() must cover the "
                 f"prompt first", rid=seq_id, live_tokens=live,
                 free_blocks=free)
+        # within capacity, the token count must agree EXACTLY with the
+        # sequence's allocated length — a short write used to zero-pad the
+        # tail block silently while `lengths` claimed those tokens stored,
+        # so decode read zeros as real context (and a long one overwrote
+        # slack slots `lengths` never covered)
+        expected = self.lengths[seq_id] - start_token
+        if S != expected or k.shape != v.shape:
+            raise ValueError(
+                f"request {seq_id}: write_prefill got k/v of {S} tokens "
+                f"(k {tuple(k.shape)}, v {tuple(v.shape)}) at start_token "
+                f"{start_token}, but the sequence's allocated length is "
+                f"{self.lengths[seq_id]} — expected exactly {expected} "
+                f"tokens; allocate() the true token count first (chunked "
+                f"prefill extends the allocation before each chunk write)")
         b0 = start_token // self.block_size
         nb = self.blocks_needed(S)
         borrowed = self._borrowed.get(seq_id, ())
@@ -441,6 +471,32 @@ class PagedKVCache:
         idx = jnp.asarray(table[b0:b0 + nb])
         self.k_pool = self.k_pool.at[:, :, idx].set(kb)
         self.v_pool = self.v_pool.at[:, :, idx].set(vb)
+
+    def write_prefill_chunk(self, seq_id: int, k: jax.Array, v: jax.Array,
+                            start_token: int) -> None:
+        """Incremental chunk write — the chunked-prefill data path: extend
+        the sequence's allocation to cover exactly this chunk (fresh blocks
+        are popped as the chunk completes, so peak up-front allocation is
+        one chunk, not the prompt), then scatter the chunk's head-major
+        (L, Hkv, C, hd) K/V at `start_token` (block-aligned; only the FINAL
+        chunk may be a partial block). Raises the same contextual
+        :class:`PoolExhausted` as the decode path when the pool cannot
+        cover the chunk's new blocks."""
+        target = start_token + k.shape[2]
+        if target > self.lengths.get(seq_id, 0):
+            try:
+                self.allocate(seq_id, target)
+            except OutOfBlocks:
+                free = sum(len(s) for s in self._free_shard)
+                live = sum(self.lengths.values())
+                raise PoolExhausted(
+                    f"KV pool exhausted growing request {seq_id}'s chunked "
+                    f"prefill to token {target}: {live} live tokens across "
+                    f"{len(self.tables)} sequences occupy all "
+                    f"{self.num_blocks} blocks ({free} free) — preempt a "
+                    f"victim or raise num_blocks", rid=seq_id,
+                    live_tokens=live, free_blocks=free) from None
+        self.write_prefill(seq_id, k, v, start_token=start_token)
 
     def write_token(self, seq_id: int, k: jax.Array, v: jax.Array,
                     position: int) -> None:
@@ -473,18 +529,37 @@ class PagedKVCache:
         self.k_pool = self.k_pool.at[:, :, blk, off].set(kn)
         self.v_pool = self.v_pool.at[:, :, blk, off].set(vn)
 
+    def gather_prefix_indices(self, seq_id: int, n_tokens: int) -> jax.Array:
+        """(nb,) int32 device array of the pool-block ids covering this
+        sequence's first `n_tokens` (block-aligned) — the index operand of
+        every prefix gather (suffix prefill, chunked prefill, recompute).
+
+        MEMOISED by block-id content: a prefix-sharing admission wave's K
+        recipients all map onto the donor's physical blocks, so the whole
+        wave (and every later chunk / recompute over the same prefix) reuses
+        ONE converted array instead of re-building it per call. Keys are the
+        ids themselves, so copy-on-write forks or free/re-allocate cycles
+        can never serve a wrong value — at worst they miss."""
+        if n_tokens % self.block_size:
+            raise ValueError(
+                f"gather_prefix n_tokens ({n_tokens}) must be block-aligned "
+                f"(block_size={self.block_size})")
+        key = tuple(self.tables[seq_id][:n_tokens // self.block_size])
+        idx = self._gather_idx_cache.get(key)
+        if idx is None:
+            if len(self._gather_idx_cache) > 4096:   # bound the memo
+                self._gather_idx_cache.clear()
+            idx = jnp.asarray(key, jnp.int32)
+            self._gather_idx_cache[key] = idx
+        return idx
+
     def gather_prefix(self, seq_id: int, n_tokens: int
                       ) -> Tuple[jax.Array, jax.Array]:
         """HEAD-MAJOR (L, Hkv, n_tokens, hd) K/V of this sequence's first
         `n_tokens` (block-aligned) — the context operand of the prefix-
         cached suffix prefill. One gather per ADMISSION (not per decode
         step), so the no-densify invariant on the decode hot path holds."""
-        if n_tokens % self.block_size:
-            raise ValueError(
-                f"gather_prefix n_tokens ({n_tokens}) must be block-aligned "
-                f"(block_size={self.block_size})")
-        nb = n_tokens // self.block_size
-        idx = jnp.asarray(self.tables[seq_id][:nb])
+        idx = self.gather_prefix_indices(seq_id, n_tokens)
         L, Hkv = self.k_pool.shape[0], self.k_pool.shape[1]
         hd = self.k_pool.shape[4]
         k = self.k_pool[:, :, idx].reshape(L, Hkv, n_tokens, hd)

@@ -16,8 +16,22 @@ The request lifecycle is streaming, not batch:
     generated* — a handle's consumer sees tokens while the rest of the
     continuous batch is still decoding;
   * :meth:`LLMEngine.events` streams iteration-level lifecycle events
-    (``submit`` / ``admit`` / ``readmit`` / ``preempt`` / ``finish``);
+    (``submit`` / ``admit`` / ``readmit`` / ``chunk`` / ``preempt`` /
+    ``finish``);
   * :meth:`LLMEngine.run` keeps the legacy drain-everything loop.
+
+Chunked paged prefill (``EngineConfig(prefill_chunk_tokens=...)``) makes
+every iteration MIXED: at most one prompt advances by one block-aligned
+chunk — its queries attending over the pool blocks already written, its KV
+scattered into incrementally-allocated blocks as the chunk completes —
+while the full decode batch decodes in the same step. Peak prefill memory
+is O(chunk) instead of O(prompt), admission charges only the first chunk
+(a prompt larger than the currently-free pool is admitted and completes as
+earlier requests retire), and decode TBT no longer stalls behind long
+prefills. Greedy outputs are bit-identical with chunking on or off (MoE
+models fall back to one-shot prefill: a chunk boundary changes
+capacity-dispatch groups — the same coupling that makes prefix sharing
+recompute them).
 
 Preemption fixes the legacy engines' latent OOM: a request that outlives
 its ``decode_headroom`` margin used to exhaust the pool with no recourse
@@ -65,7 +79,7 @@ class SchedulingStalled(RuntimeError):
 class EngineEvent:
     """One iteration-level lifecycle event (the ``events()`` stream)."""
 
-    kind: str          # submit | admit | readmit | preempt | finish
+    kind: str          # submit | admit | readmit | chunk | preempt | finish
     rid: int
     step: int          # engine step counter when the event fired
     info: Dict = dataclasses.field(default_factory=dict)
@@ -142,7 +156,15 @@ class LLMEngine:
         self.kv = PagedKVCache(cfg, econf.num_blocks, econf.block_size,
                                n_shards=econf.resolved_kv_shards)
         self.placement: PlacementStrategy = make_placement(cfg, econf)
-        self.policy = make_policy(econf.scheduler)
+        # Chunked prefill is a COMPUTE decision like the prefix-sharing
+        # skip: a chunk boundary changes MoE capacity-dispatch groups, so
+        # chunked MoE prefill would not be bit-stable against the one-shot
+        # — MoE models fall back to one-shot prefill (the config knob is
+        # accepted and simply has no effect).
+        self._chunk_tokens = (econf.prefill_chunk_tokens
+                              if cfg.family != "moe" else None)
+        self.policy = make_policy(econf.scheduler,
+                                  prefill_chunk_tokens=self._chunk_tokens)
         self.sched = RequestScheduler(self.kv, econf.max_batch, self.policy,
                                       econf.decode_headroom,
                                       prefix_sharing=econf.prefix_sharing)
@@ -161,6 +183,20 @@ class LLMEngine:
             return transformer.prefill_suffix(p, cfg, b, kp[:, None],
                                               vp[:, None])
         self._prefill_suffix_jit = jax.jit(_suffix_prefill)
+        # chunked paged prefill: one chunk's queries over the already-
+        # written pool blocks. The context path follows decode_backend:
+        # 'jnp' gathers one layer's prefix at a time inside the scan and is
+        # BIT-IDENTICAL to the one-shot prefill; 'pallas' streams the pool
+        # in place through the chunk kernel (no densify — kernel numerics,
+        # allclose to the reference like every other pallas backend).
+        # Chunk shapes amortise across prompts: for a fixed chunk size the
+        # prefix-index operand only takes shapes (0,), (cb,), (2·cb,), …,
+        # so a second long prompt reuses the first one's compiled programs
+        # (one-shot prefill, by contrast, compiles per distinct prompt
+        # length); only the final partial chunk adds a per-length shape.
+        self._prefill_chunk_jit = jax.jit(
+            lambda p, b, kp, vp, idx: transformer.prefill_chunk(
+                p, cfg, b, kp, vp, idx, backend=econf.decode_backend))
         # Prefill COMPUTE can only be skipped when suffix-only prefill is
         # bit-identical to the full one. MoE capacity dispatch couples the
         # tokens of a routing group (expert capacity and reduction shapes
@@ -221,14 +257,26 @@ class LLMEngine:
     # the iteration
     # ------------------------------------------------------------------
     def step(self) -> None:
-        """One engine iteration: admit (prefill / recompute), resolve pool
-        pressure (possibly preempting), decode one token for every running
-        request, retire the finished."""
+        """One MIXED engine iteration: admit (one-shot prefill / recompute,
+        or chunked admission that only seeds a prefill cursor), resolve
+        pool pressure (possibly preempting), advance at most one prefill
+        chunk, decode one token for every running request whose prefill is
+        complete, retire the finished."""
         self._step_no += 1
         while True:
             admitted = self.sched.admit()
             for req in admitted:
-                if req.output:                 # preempted earlier: recompute
+                if self.sched.prefill_cursor(req.rid) is not None:
+                    # chunked admission: only the first chunk's blocks were
+                    # charged; the model runs via _prefill_chunk_iteration,
+                    # one chunk per engine step, alongside the decode batch
+                    shared = self.sched.shared_prefix_tokens(req.rid)
+                    self.stats.blocks_shared += shared // self.kv.block_size
+                    self.stats.prefill_tokens_skipped += shared
+                    kind = "readmit" if req.output else "admit"
+                    self._emit(kind, req.rid, prompt_len=len(req.prompt),
+                               chunked=True)
+                elif req.output:               # preempted earlier: recompute
                     self._recompute(req)
                     self._emit("readmit", req.rid,
                                recomputed_tokens=self.kv.lengths[req.rid])
@@ -250,6 +298,7 @@ class LLMEngine:
                 f"({len(self.kv.free)} free) and nothing is running — it "
                 f"can never be admitted; shrink the prompt or grow "
                 f"num_blocks")
+        self._prefill_chunk_iteration()
         self._decode_iteration()
         self._retire()
 
@@ -308,8 +357,10 @@ class LLMEngine:
         # kv.blocks_shared_total keeps the engine-lifetime cumulative view
         self.stats.blocks_shared += shared // self.kv.block_size
         if shared and self._skip_prefill_compute:
-            idx = jnp.asarray(
-                self.kv.tables[rid][:shared // self.kv.block_size], jnp.int32)
+            # memoised gather indices: a prefix-sharing admission wave's K
+            # recipients all resolve to the donor's physical blocks, so the
+            # whole wave reuses one converted index array
+            idx = self.kv.gather_prefix_indices(rid, shared)
             toks = jnp.asarray([list(known[shared:])], jnp.int32)
             logits, cache = self._prefill_suffix_jit(
                 self.params, {"tokens": toks}, self.kv.k_pool,
@@ -318,8 +369,12 @@ class LLMEngine:
             self.kv.write_prefill(rid, cache["k"][:, 0], cache["v"][:, 0],
                                   start_token=shared)
             self.stats.prefill_tokens_skipped += shared
+            self.stats.max_prefill_slab_tokens = max(
+                self.stats.max_prefill_slab_tokens, len(known) - shared)
             return logits
         toks = jnp.asarray([list(known)], jnp.int32)
+        self.stats.max_prefill_slab_tokens = max(
+            self.stats.max_prefill_slab_tokens, len(known))
         logits, cache = self._prefill_jit(self.params, {"tokens": toks})
         # cache k/v are head-major (L, 1, Hkv, S, hd) — the pool's layout
         self.kv.write_prefill(rid, cache["k"][:, 0, :, shared:],
@@ -328,10 +383,113 @@ class LLMEngine:
         return logits
 
     # ------------------------------------------------------------------
+    # chunked prefill (mixed iterations)
+    # ------------------------------------------------------------------
+    def _prefill_chunk_iteration(self) -> None:
+        """Advance the OLDEST incomplete prefill by one chunk (the
+        per-iteration prefill token budget, ``prefill_chunk_tokens``) while
+        the decode batch keeps decoding — the paper-§4 overlap on the
+        prefill axis. The chunk's queries attend over the already-written
+        pool blocks (plus the in-chunk causal mask), its KV is written as
+        it completes (blocks allocated incrementally), and only the FINAL
+        chunk samples the request's first token."""
+        req = self.sched.next_prefill()
+        if req is None:
+            return
+        rid = req.rid
+        # re-admission after preemption recomputes prompt + generated
+        # tokens minus the still-unstored last one (the §5 recovery path)
+        known = list(req.prompt) + req.output[:-1] if req.output \
+            else req.prompt
+        total = len(known)
+        cursor = self.sched.prefill_cursor(rid)
+        target = min(cursor + self._chunk_tokens, total)
+        grow = self.kv.blocks_needed(target) - len(self.kv.tables[rid])
+        # the FINAL chunk re-establishes the decode headroom one-shot
+        # admission reserves up front: completing a prefill with zero slack
+        # would strand the request at its first decode-growth block
+        headroom = 0
+        if target >= total:
+            headroom = (self.kv.blocks_needed(total +
+                                              self.sched.decode_headroom) -
+                        self.kv.blocks_needed(total))
+        if grow + headroom > 0:
+            # the chunk may not starve the decode batch either: reserve the
+            # blocks this iteration's decodes are about to append before
+            # taking any for the chunk (the decoders are what retires and
+            # frees the rest of this prompt's allocation)
+            reserve = sum(self.kv.blocks_to_append(r.rid)
+                          for r in self.sched.running
+                          if r.state == State.RUNNING
+                          and self.sched.prefill_done(r.rid))
+            if not self._free_blocks_for_chunk(req,
+                                               grow + headroom + reserve):
+                return  # stall this iteration: admission charged only the
+                # first chunk, so the rest of the allocation arrives as
+                # running requests retire — decode continues meanwhile
+        toks = jnp.asarray([list(known[cursor:target])], jnp.int32)
+        idx = self.kv.gather_prefix_indices(rid, cursor)
+        logits, cache = self._prefill_chunk_jit(
+            self.params, {"tokens": toks}, self.kv.k_pool, self.kv.v_pool,
+            idx)
+        # chunk cache k/v are head-major (L, 1, Hkv, C, hd) — the pool's
+        # layout; write_prefill_chunk extends the allocation then scatters
+        self.kv.write_prefill_chunk(rid, cache["k"][:, 0], cache["v"][:, 0],
+                                    start_token=cursor)
+        self.stats.prefill_chunks_run += 1
+        self.stats.max_prefill_slab_tokens = max(
+            self.stats.max_prefill_slab_tokens, target - cursor)
+        self.placement.log_prefill_chunk(target - cursor)
+        self._emit("chunk", rid, start=cursor, tokens=target - cursor,
+                   remaining=total - target)
+        self.sched.advance_prefill(req, target)
+        if target >= total and not req.output:
+            # last chunk's last position seeds sampling — same contract as
+            # the one-shot prefill (TTFT lands here)
+            tok = self._sample([req], logits)
+            req.record_token(int(tok[0]))
+
+    def _free_blocks_for_chunk(self, req: Request, need: int) -> bool:
+        """Check `need` blocks are free before a chunk allocation. Chunk
+        growth NEVER preempts: while any decoder is still running the
+        chunk simply STALLS this iteration (returns False) — decoders
+        retire (or are themselves evicted by the decode-side pool-pressure
+        path) and the freed blocks arrive over the next iterations, which
+        is chunked admission's whole point. This also makes the sharing
+        safety invariant enforced rather than emergent: a MID-PREFILL
+        request is never a preemption victim anywhere (the decode path
+        only selects among prefill-complete requests), so blocks a donor
+        has allocated are always eventually written — a recipient mapped
+        onto them can never gather garbage. Raises contextual
+        :class:`PoolExhausted` only when no running decoder is left to
+        ever free a block."""
+        if self.kv.num_free >= need:
+            return True
+        if any(r.state == State.RUNNING and r is not req
+               and self.sched.prefill_done(r.rid)
+               for r in self.sched.running):
+            return False             # decoders still running: wait them out
+        free = self.kv.num_free
+        fix = ("raise num_blocks" if self.policy.preemptible
+               else "use scheduler='preempt' or raise num_blocks")
+        raise PoolExhausted(
+            f"KV pool exhausted mid chunked prefill: request "
+            f"{req.rid} needs {need} blocks for its next chunk and "
+            f"{free} of {self.kv.num_blocks} are free "
+            f"({sum(self.kv.lengths.values())} live tokens across "
+            f"{len(self.kv.tables)} sequences) with no running "
+            f"decoder left to retire: {fix}",
+            rid=req.rid,
+            live_tokens=sum(self.kv.lengths.values()),
+            free_blocks=free)
+
+    # ------------------------------------------------------------------
     # decode
     # ------------------------------------------------------------------
     def _decode_iteration(self) -> None:
-        running = [r for r in self.sched.running if r.state == State.RUNNING]
+        running = [r for r in self.sched.running
+                   if r.state == State.RUNNING
+                   and self.sched.prefill_done(r.rid)]
         if not running:
             return
         running = self._resolve_pool_pressure(running)
@@ -379,7 +537,7 @@ class LLMEngine:
 
         while True:
             growers = [r for r in running if needs_block(r)]
-            free = len(self.kv.free)
+            free = self.kv.num_free
             if len(growers) <= free:
                 return running
             victim = self.policy.select_victim(running)

@@ -35,7 +35,8 @@ from repro.models.common import ModelConfig, rms_norm
 from repro.models.ffn import ffn_forward
 from repro.models.moe import moe_forward
 from repro.serving.config import EngineConfig
-from repro.serving.disagg_engine import AttentionWorkerPool, TransferLog
+from repro.serving.disagg_engine import (BYTES, AttentionWorkerPool,
+                                         TransferLog)
 from repro.serving.kvcache import PagedKVCache
 from repro.serving.moe_offload import ExpertWorkerPool
 
@@ -123,6 +124,12 @@ class PlacementStrategy:
     def log_step(self, batch: int) -> None:
         pass
 
+    def log_prefill_chunk(self, tokens: int) -> None:
+        """Account one prefill chunk's KV landing in the pool (chunked
+        prefill ships each chunk's (L, Hkv, C, hd) K/V model->pool as it
+        completes; homogeneous placement moves nothing off-worker)."""
+        pass
+
     # ---- introspection (CLI / benchmarks) ----
     @property
     def pool(self) -> Optional[AttentionWorkerPool]:
@@ -208,6 +215,15 @@ class AttentionPoolPlacement(PlacementStrategy):
 
     def log_step(self, batch: int) -> None:
         self._pool.log_iteration(batch)
+
+    def log_prefill_chunk(self, tokens: int) -> None:
+        """One chunk's KV crosses the wire model->pool once per layer (the
+        prefill-axis counterpart of the per-step k_new/v_new transfer)."""
+        cfg = self.cfg
+        hd = cfg.resolved_head_dim
+        self._pool.log.kv_bytes += (2 * tokens * cfg.num_kv_heads * hd *
+                                    BYTES * cfg.num_layers)
+        self._pool.log.transfers += cfg.num_layers
 
 
 class MoEOffloadPlacement(AttentionPoolPlacement):

@@ -128,15 +128,57 @@ class PreemptingPolicy(FCFSPolicy):
         return "PreemptingPolicy()"
 
 
+class ChunkedPrefillPolicy:
+    """Chunked admission: wraps an inner admission/eviction policy and
+    admits PARTIAL prompts — the ROADMAP's reserved scheduler hook.
+
+    Admission charges only the request's FIRST prefill chunk (plus decode
+    headroom) against the free list instead of the whole prompt, so a long
+    prompt is admitted while most of the pool is still held by running
+    requests; its remaining blocks are allocated incrementally, one chunk
+    per engine iteration, as earlier requests retire and free them. The
+    scheduler carries a per-request prefill CURSOR (tokens computed so
+    far); the engine runs at most one chunk per iteration alongside the
+    full decode batch (``prefill_chunk_tokens`` is the per-iteration
+    prefill token budget), so decode TBT never stalls behind a long
+    prefill. Victim selection under pool pressure delegates to the inner
+    policy unchanged."""
+
+    def __init__(self, inner: SchedulingPolicy, chunk_tokens: int):
+        if chunk_tokens < 1:
+            raise ValueError(f"chunk_tokens must be >= 1; got {chunk_tokens}")
+        self.inner = inner
+        self.chunk_tokens = chunk_tokens
+        self.name = f"chunked[{inner.name}]"
+
+    @property
+    def preemptible(self) -> bool:
+        return self.inner.preemptible
+
+    def select_victim(self, running: Sequence[Request]) -> Optional[Request]:
+        return self.inner.select_victim(running)
+
+    def __repr__(self):
+        return (f"ChunkedPrefillPolicy({self.inner!r}, "
+                f"chunk_tokens={self.chunk_tokens})")
+
+
 POLICIES = {"fcfs": FCFSPolicy, "preempt": PreemptingPolicy}
 
 
-def make_policy(name: str) -> SchedulingPolicy:
+def make_policy(name: str,
+                prefill_chunk_tokens: Optional[int] = None
+                ) -> SchedulingPolicy:
+    """Build a policy by name, optionally wrapped for chunked prefill
+    (``prefill_chunk_tokens`` is the per-iteration prefill token budget)."""
     try:
-        return POLICIES[name]()
+        policy = POLICIES[name]()
     except KeyError:
         raise ValueError(f"unknown scheduler policy {name!r}; "
                          f"choose from {sorted(POLICIES)}") from None
+    if prefill_chunk_tokens is not None:
+        policy = ChunkedPrefillPolicy(policy, prefill_chunk_tokens)
+    return policy
 
 
 # ======================================================================
@@ -174,9 +216,14 @@ class PrefixIndex:
             yield key
 
     def register(self, rid: int, prompt: Sequence[int]) -> None:
-        """Index every full prompt block of a just-admitted request."""
-        keys = []
-        for key in self._chain(prompt):
+        """Index every full prompt block of `prompt` for `rid`. Idempotent
+        and INCREMENTAL: re-registering (or registering a longer prefix of
+        the same prompt) only adds blocks deeper than those already
+        indexed, so callers need not track what is registered."""
+        keys = self._keys_of.get(rid, [])
+        for depth, key in enumerate(self._chain(prompt)):
+            if depth < len(keys):
+                continue                 # already indexed (shallower call)
             self._nodes.setdefault(key, set()).add(rid)
             keys.append(key)
         if keys:
@@ -227,7 +274,16 @@ class RequestScheduler:
         UNSHARED suffix against the free list — the same pool memory
         admits strictly more concurrent requests. The engine reads
         :meth:`shared_prefix_tokens` to slice the prompt before prefill
-        (matched blocks are never recomputed).
+        (matched blocks are never recomputed);
+      * with a :class:`ChunkedPrefillPolicy` (``chunk_tokens`` set),
+        admission charges only the FIRST prefill chunk and the scheduler
+        carries a per-request prefill cursor (:meth:`prefill_cursor`);
+        the engine advances the oldest incomplete prefill by one chunk per
+        iteration (:meth:`next_prefill` / :meth:`advance_prefill`) while
+        the decode batch — everyone for whom :meth:`prefill_done` — keeps
+        decoding. Prefix-index registration follows the WRITES, so a
+        waiting request can never match a donor block whose KV is not in
+        the pool yet.
     """
 
     kv: PagedKVCache
@@ -243,6 +299,23 @@ class RequestScheduler:
         self.prefix_index: Optional[PrefixIndex] = (
             PrefixIndex(self.kv.block_size) if self.prefix_sharing else None)
         self._shared: Dict[int, int] = {}  # rid -> shared prefix tokens
+        # rid -> prefill cursor (tokens computed & written so far) for
+        # requests admitted CHUNKED and still mid-prefill; absence means the
+        # prefill is complete (or the request was admitted one-shot)
+        self._prefill_cursor: Dict[int, int] = {}
+        if self.chunk_tokens is not None and \
+                self.chunk_tokens % self.kv.block_size:
+            # EngineConfig validates this too; direct RequestScheduler
+            # callers must fail at construction, not mid-run when a
+            # misaligned cursor hits the block-aligned gather
+            raise ValueError(
+                f"prefill chunk_tokens ({self.chunk_tokens}) must be a "
+                f"multiple of the KV block size ({self.kv.block_size})")
+
+    @property
+    def chunk_tokens(self) -> Optional[int]:
+        """Per-iteration prefill token budget (None = one-shot prefill)."""
+        return getattr(self.policy, "chunk_tokens", None)
 
     # ---- queue management ----
     def submit(self, reqs: Sequence[Request]) -> None:
@@ -264,12 +337,20 @@ class RequestScheduler:
         """Deepest usable prefix match for `req`: capped one block short of
         `stored` tokens so at least one token is left to prefill (the last
         prompt token's logits seed sampling; a recompute needs a non-empty
-        suffix too)."""
+        suffix too), and capped at the DONOR's allocated length — a chunked
+        donor's table grows one chunk per iteration, so a recipient can
+        only map onto blocks the donor already has (they are written by
+        the time the recipient's own prefill reads them: chunk prefills
+        run FCFS over admission order, and the same-wave canonical-fill
+        invariant covers the donor's in-flight chunk)."""
         if self.prefix_index is None:
             return None, 0
         donor, matched = self.prefix_index.match(req.prompt)
         bs = self.kv.block_size
         matched = min(matched, ((stored - 1) // bs) * bs)
+        if donor is not None:
+            matched = min(matched,
+                          (self.kv.lengths.get(donor, 0) // bs) * bs)
         if donor is None or matched <= 0:
             return None, 0
         return donor, matched
@@ -281,24 +362,122 @@ class RequestScheduler:
         trade-off — a size-aware policy can override this hook). With prefix
         sharing, only the unshared suffix is charged against the pool."""
         admitted = []
+        chunk = self.chunk_tokens
         while self.waiting and len(self.running) < self.max_batch:
             req = self.waiting[0]
             stored = self.stored_tokens(req)
             donor, shared = self._match_prefix(req, stored)
-            if not self.kv.can_allocate(stored - shared +
-                                        self.decode_headroom):
+            if chunk:
+                # chunked admission: charge only the FIRST chunk (plus
+                # headroom) up front — later chunks allocate incrementally
+                # as the prefill progresses. Guards against admissions
+                # that could NEVER complete (they would deadlock
+                # mid-prefill instead of surfacing SchedulingStalled):
+                # the pool must hold this request outright, and admitting
+                # it must leave every OLDER mid-prefill prompt completable
+                # (only the oldest prefill progresses, so a younger
+                # partial prompt's holdings are stuck until it finishes —
+                # decoder holdings, by contrast, free as they retire).
+                if self.kv.blocks_needed(stored + self.decode_headroom) > \
+                        self.kv.num_blocks:
+                    break
+                first = min(chunk, stored - shared)
+                if not self._chunked_commitment_ok(donor, shared, first):
+                    break
+            else:
+                first = stored - shared
+            if not self.kv.can_allocate(first + self.decode_headroom):
                 break
             self.waiting.pop(0)
             if shared:
                 self.kv.share_blocks(donor, req.rid, shared)
-            self.kv.allocate(req.rid, stored)
+            self.kv.allocate(req.rid, shared + first)
             self._shared[req.rid] = shared
+            if chunk:
+                self._prefill_cursor[req.rid] = shared
             if self.prefix_index is not None:
+                # the full prompt is indexable immediately, even though a
+                # CHUNKED donor's blocks fill over many iterations, because
+                # an allocated block is always eventually written: matches
+                # are capped at the donor's ALLOCATED length
+                # (_match_prefix), the only reader of a borrowed prefix is
+                # the recipient's own prefill (its first chunk / suffix
+                # gather) which runs strictly AFTER the older donor's
+                # chunks (next_prefill is FCFS over admission order), and a
+                # mid-prefill request is never a preemption victim
+                # anywhere (decode pool pressure selects only among
+                # prefill-complete requests; chunk growth never preempts —
+                # llm_engine._free_blocks_for_chunk), so the promise cannot
+                # be revoked. One-shot admission keeps the same-wave
+                # canonical-fill invariant (serving/kvcache.py).
                 self.prefix_index.register(req.rid, req.prompt)
             req.state = State.RUNNING
             self.running.append(req)
             admitted.append(req)
         return admitted
+
+    def _chunked_commitment_ok(self, donor: Optional[int], shared: int,
+                               first: int) -> bool:
+        """Aggregate over-commitment guard for chunked admission: would
+        admitting a new partial prompt still leave every OLDER mid-prefill
+        request O able to complete? Chunk prefills run strictly FCFS, so
+        the PHYSICAL blocks referenced by prefills younger than O (plus the
+        new request's) are stuck until O finishes — each O needs its full
+        allocation (stored + headroom) to fit in ``num_blocks`` minus
+        those stuck holdings. Without this check, several long partial
+        prompts admitted together deadlock into PoolExhausted on a pool
+        that serves the same workload one-shot (serially) without trouble.
+
+        Stuck blocks are counted as UNIQUE physical ids, excluding O's own
+        table — a donor block prefix-shared by K mid-prefill sharers
+        counts once, not K times, so co-admitting a common-prefix family
+        keeps the capacity win sharing exists for. The new request's
+        holdings are its donor's shared blocks (by id) plus
+        ``blocks_needed(shared+first) − blocks_needed(shared)`` fresh
+        ones (ids unknown until allocation — necessarily disjoint from
+        everything live)."""
+        mids = [r for r in self.running if r.rid in self._prefill_cursor]
+        new_shared = (self.kv.tables[donor][:self.kv.blocks_needed(shared)]
+                      if donor is not None else [])
+        new_fresh = (self.kv.blocks_needed(shared + first) -
+                     self.kv.blocks_needed(shared))
+        for i, o in enumerate(mids):
+            stuck = {b for y in mids[i + 1:] for b in self.kv.tables[y.rid]}
+            stuck.update(new_shared)
+            stuck.difference_update(self.kv.tables[o.rid])
+            need_o = self.kv.blocks_needed(self.stored_tokens(o) +
+                                           self.decode_headroom)
+            if need_o + len(stuck) + new_fresh > self.kv.num_blocks:
+                return False
+        return True
+
+    # ---- chunked-prefill cursor surface (ChunkedPrefillPolicy) ----
+    def next_prefill(self) -> Optional[Request]:
+        """Oldest running request whose chunked prefill is incomplete — the
+        one the engine advances by one chunk this iteration (FCFS over the
+        admission order; at most one chunk runs per iteration)."""
+        for r in self.running:
+            if r.rid in self._prefill_cursor:
+                return r
+        return None
+
+    def prefill_cursor(self, rid: int) -> Optional[int]:
+        """Tokens of `rid`'s prompt computed & written so far, or None when
+        its prefill is complete (or it was admitted one-shot)."""
+        return self._prefill_cursor.get(rid)
+
+    def prefill_done(self, rid: int) -> bool:
+        """True when `rid` may join the decode batch (no pending chunks)."""
+        return rid not in self._prefill_cursor
+
+    def advance_prefill(self, req: Request, cursor: int) -> None:
+        """Record that `req`'s prefill has computed & written `cursor`
+        tokens; reaching the stored-token target completes the prefill
+        (the request joins the decode batch from the next iteration on)."""
+        if cursor >= self.stored_tokens(req):
+            self._prefill_cursor.pop(req.rid, None)
+        else:
+            self._prefill_cursor[req.rid] = cursor
 
     def _release(self, rid: int) -> None:
         """Drop a request's pool blocks (refcount-aware) and its prefix-
@@ -308,6 +487,8 @@ class RequestScheduler:
         recipients."""
         self.kv.free_seq(rid)
         self._shared.pop(rid, None)
+        self._prefill_cursor.pop(rid, None)   # a preempted mid-prefill
+        # request recomputes from scratch on re-admission (fresh cursor)
         if self.prefix_index is not None:
             self.prefix_index.unregister(rid)
 
