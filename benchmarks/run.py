@@ -1,18 +1,26 @@
 """Benchmark harness entry point — one module per paper table/figure.
 Prints ``name,us_per_call,derived`` CSV (deliverable d).
 
-  PYTHONPATH=src python -m benchmarks.run [--only fig10] [--quick]
+  PYTHONPATH=src python -m benchmarks.run [--only fig10] [--quick] \
+      [--json-dir out/]
 
 ``--quick`` runs every registered benchmark at tiny shapes (modules whose
 run() accepts a `quick` kwarg shrink their sweeps; the rest are already
 cheap) — the CI bit-rot guard tests/test_benchmarks.py invokes it, so a
 benchmark that stops importing or running fails tier-1.
+
+``--json-dir`` additionally writes one machine-readable snapshot per
+benchmark — ``BENCH_<label>.json`` with the rows, wall time, and run
+metadata — so CI can archive results and runs can be diffed across
+commits without parsing the CSV stream.
 """
 from __future__ import annotations
 
 import argparse
 import importlib
 import inspect
+import json
+import os
 import sys
 import time
 
@@ -31,8 +39,31 @@ MODULES = [
     ("block_sharded_attention", "benchmarks.bench_block_sharding"),
     ("prefix_sharing", "benchmarks.bench_prefix_sharing"),
     ("chunked_prefill", "benchmarks.bench_chunked_prefill"),
+    ("fault_recovery", "benchmarks.bench_fault_recovery"),
     ("sec7_extensions", "benchmarks.bench_extensions"),
 ]
+
+
+def _write_snapshot(json_dir: str, label: str, rows, elapsed_s: float,
+                    quick: bool) -> str:
+    """One BENCH_<label>.json per benchmark: rows verbatim plus run
+    metadata. Atomic-ish (write then rename) so a killed run never leaves
+    a truncated snapshot behind."""
+    os.makedirs(json_dir, exist_ok=True)
+    path = os.path.join(json_dir, f"BENCH_{label}.json")
+    doc = {
+        "label": label,
+        "generated_unix": time.time(),
+        "quick": quick,
+        "elapsed_s": round(elapsed_s, 3),
+        "rows": rows,
+    }
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+        f.write("\n")
+    os.replace(tmp, path)
+    return path
 
 
 def main(argv=None) -> None:
@@ -40,6 +71,9 @@ def main(argv=None) -> None:
     ap.add_argument("--only", default="")
     ap.add_argument("--quick", action="store_true",
                     help="tiny shapes for every benchmark (CI bit-rot guard)")
+    ap.add_argument("--json-dir", default="",
+                    help="also write one BENCH_<label>.json snapshot per "
+                         "benchmark into this directory")
     args = ap.parse_args(argv)
     print("name,us_per_call,derived")
     failures = 0
@@ -56,7 +90,12 @@ def main(argv=None) -> None:
             rows = mod.run(**kw)
             for r in rows:
                 print(f"{r['name']},{r['us_per_call']},\"{r['derived']}\"")
-            print(f"# {label}: {len(rows)} rows in {time.time()-t0:.1f}s",
+            elapsed = time.time() - t0
+            if args.json_dir:
+                path = _write_snapshot(args.json_dir, label, rows, elapsed,
+                                       args.quick)
+                print(f"# {label}: snapshot {path}", file=sys.stderr)
+            print(f"# {label}: {len(rows)} rows in {elapsed:.1f}s",
                   file=sys.stderr)
         except Exception as e:  # noqa: BLE001
             failures += 1

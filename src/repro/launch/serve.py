@@ -6,6 +6,13 @@ three placements — and the scheduler is pluggable (fcfs | preempt).
       --trace azure-conv --requests 16
 
   (or: PYTHONPATH=src python -m repro.launch.serve ...)
+
+Fault injection (``--fault-scenario``) attaches a deterministic, seeded
+fault schedule at the attention-pool boundary — shard death / transient /
+corrupt / straggle — and the run reports the recovery counters and
+recovery-latency percentiles. Ctrl-C shuts down gracefully: in-flight
+requests are cancelled (partial outputs kept) and the stats summary always
+prints.
 """
 from __future__ import annotations
 
@@ -46,6 +53,21 @@ def main() -> None:
     ap.add_argument("--backend", default="jnp", choices=["jnp", "pallas"])
     ap.add_argument("--events", action="store_true",
                     help="print the iteration-level lifecycle event stream")
+    ap.add_argument("--kv-shards", type=int, default=0,
+                    help="shard the KV pool's block axis over this many "
+                         "pool shards (0 = derive: block partition shards "
+                         "over the attention workers, otherwise 1). Fault "
+                         "injection targets these shards")
+    ap.add_argument("--fault-scenario", default=None,
+                    help="deterministic fault schedule at the pool "
+                         "boundary: inline DSL "
+                         "'kind:key=val,...;kind:...' (kinds: shard_death "
+                         "| transient | corrupt | straggle; keys: shard, "
+                         "step, failures, rejoin, delay_ms) or a path to "
+                         "a JSON scenario file")
+    ap.add_argument("--fault-retry-limit", type=int, default=3,
+                    help="failed probes / corrupted outputs a shard may "
+                         "accumulate before being declared dead")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -53,7 +75,8 @@ def main() -> None:
     from repro.configs import registry
     from repro.data import traces
     from repro.models import transformer
-    from repro.serving import EngineConfig, LLMEngine
+    from repro.serving import (EngineConfig, FaultInjector, FaultScenario,
+                               LLMEngine)
 
     placement = {"vllm": "homogeneous", "lamina": "attention_pool",
                  None: args.placement}[args.engine]
@@ -67,17 +90,31 @@ def main() -> None:
         attention_workers=args.attention_workers,
         expert_workers=args.expert_workers,
         max_batch=args.max_batch, num_blocks=args.num_blocks,
+        kv_shards=args.kv_shards or None,
         scheduler=args.scheduler, decode_backend=args.backend,
         prefix_sharing=args.prefix_sharing,
         prefill_chunk_tokens=args.prefill_chunk_tokens or None,
+        fault_retry_limit=args.fault_retry_limit,
         seed=args.seed)
-    eng = LLMEngine(cfg, params, econf)
+    injector = None
+    if args.fault_scenario:
+        injector = FaultInjector(FaultScenario.parse(args.fault_scenario))
+    eng = LLMEngine(cfg, params, econf, fault_injector=injector)
     eng.submit(reqs)
-    if args.events:
-        for ev in eng.events():      # events() drives the engine to drain
-            print(f"  step {ev.step:4d} {ev.kind:8s} rid={ev.rid} {ev.info}")
-    else:
-        eng.run()
+    # graceful shutdown: Ctrl-C cancels the in-flight requests (pool blocks
+    # freed, partial outputs kept, handle iterators terminate) and the
+    # stats summary below ALWAYS prints — an interrupted run still reports
+    try:
+        if args.events:
+            for ev in eng.events():  # events() drives the engine to drain
+                print(f"  step {ev.step:4d} {ev.kind:8s} rid={ev.rid} "
+                      f"{ev.info}")
+        else:
+            eng.run()
+    except KeyboardInterrupt:
+        n = eng.cancel_all()
+        print(f"\ninterrupted — cancelled {n} in-flight request(s), "
+              f"partial outputs kept; draining stats")
     s = eng.stats.summary()
     print(f"placement={placement} partition={args.partition} "
           f"scheduler={args.scheduler} trace={args.trace} "
@@ -95,6 +132,16 @@ def main() -> None:
               f"prefill_tokens_skipped={s['prefill_tokens_skipped']} "
               f"cow_forks={eng.kv.cow_forks} "
               f"used_blocks={eng.kv.used_blocks}")
+    if args.fault_scenario or s["shard_failures"] or s["fault_retries"]:
+        print(f"faults shard_failures={s['shard_failures']} "
+              f"rejoins={s['shard_rejoins']} "
+              f"transient_recovered={s['transient_faults_recovered']} "
+              f"retries={s['fault_retries']} "
+              f"straggles={s['straggle_steps']} "
+              f"requests_recovered={s['requests_recovered']}")
+        print(f"recovery_ms p50={s['recovery_p50_s']*1e3:.1f} "
+              f"p90={s['recovery_p90_s']*1e3:.1f} "
+              f"p99={s['recovery_p99_s']*1e3:.1f}")
     print(f"ttft_ms p50={s['ttft_p50_s']*1e3:.1f} "
           f"p90={s['ttft_p90_s']*1e3:.1f} p99={s['ttft_p99_s']*1e3:.1f}  "
           f"tbt_ms p50={s['tbt_p50_s']*1e3:.1f} "

@@ -19,8 +19,11 @@ import them from their own modules.
 """
 from repro.serving.config import EngineConfig
 from repro.serving.engine import EngineStats
+from repro.serving.faults import (FaultEvent, FaultInjector, FaultScenario,
+                                  ShardHealthTracker)
 from repro.serving.kvcache import OutOfBlocks, PagedKVCache, PoolExhausted
-from repro.serving.llm_engine import (EngineEvent, LLMEngine, RequestHandle,
+from repro.serving.llm_engine import (CorruptedLogitsError, EngineEvent,
+                                      LLMEngine, RequestHandle,
                                       SchedulingStalled)
 from repro.serving.placement import PlacementStrategy, make_placement
 from repro.serving.request import Request, SamplingParams, State
@@ -32,7 +35,9 @@ from repro.serving.scheduler import (ChunkedPrefillPolicy, FCFSPolicy,
 
 __all__ = [
     "EngineConfig", "EngineStats", "EngineEvent", "LLMEngine",
-    "RequestHandle", "SchedulingStalled", "PlacementStrategy",
+    "RequestHandle", "SchedulingStalled", "CorruptedLogitsError",
+    "FaultEvent", "FaultInjector", "FaultScenario", "ShardHealthTracker",
+    "PlacementStrategy",
     "make_placement", "Request", "SamplingParams", "State",
     "PagedKVCache", "OutOfBlocks", "PoolExhausted",
     "request_key", "sample_per_request",

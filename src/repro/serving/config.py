@@ -85,6 +85,17 @@ class EngineConfig:
     # capacity-dispatch groups, the same reason prefix sharing recomputes.)
     prefill_chunk_tokens: Optional[int] = None
 
+    # ---- fault tolerance (shard health machine; serving/faults.py) ----
+    # Failed probes / corrupted-output validations a shard may accumulate
+    # before being declared DEAD (quarantine + request recovery). A
+    # transient fault that clears within fault_retry_limit - 1 strikes
+    # recovers via retry with no eviction at all.
+    fault_retry_limit: int = 3
+    # Host-side backoff between retries (seconds; attempt i sleeps
+    # backoff·2^i). 0 keeps tests/CI instant — real deployments set it to
+    # their RPC timeout scale.
+    fault_retry_backoff_s: float = 0.0
+
     # ---- decode backend / RNG ----
     decode_backend: str = "jnp"
     # fallback sampling seed for requests whose SamplingParams.seed is None
@@ -111,6 +122,12 @@ class EngineConfig:
                                  f"got {getattr(self, field)}")
         if self.decode_headroom < 0:
             raise ValueError("decode_headroom must be >= 0")
+        if self.fault_retry_limit < 1:
+            raise ValueError(f"fault_retry_limit must be >= 1; "
+                             f"got {self.fault_retry_limit}")
+        if self.fault_retry_backoff_s < 0:
+            raise ValueError(f"fault_retry_backoff_s must be >= 0; "
+                             f"got {self.fault_retry_backoff_s}")
         if self.prefill_chunk_tokens is not None:
             if self.prefill_chunk_tokens < 1:
                 raise ValueError(

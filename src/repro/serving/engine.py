@@ -60,6 +60,18 @@ class EngineStats:
     # prompt when off (the admission-capping transient the tentpole kills)
     prefill_chunks_run: int = 0
     max_prefill_slab_tokens: int = 0
+    # fault tolerance (LLMEngine with a FaultInjector / shard health
+    # machine, serving/faults.py): shard lifecycle counts, retry volume,
+    # and per-request recovery latency samples (seconds from the shard
+    # being declared dead to the victim request decodable again on the
+    # surviving shards — detection + eviction + recompute re-admission)
+    shard_failures: int = 0
+    shard_rejoins: int = 0
+    transient_faults_recovered: int = 0
+    fault_retries: int = 0
+    straggle_steps: int = 0
+    requests_recovered: int = 0
+    recovery_latencies: List[float] = dataclasses.field(default_factory=list)
 
     @property
     def mean_batch(self) -> float:
@@ -99,6 +111,11 @@ class EngineStats:
         """p50/p90/p99 of per-request mean time-between-tokens (s)."""
         return self._pcts(self.request_tbts)
 
+    def recovery_percentiles(self) -> Dict[str, float]:
+        """p50/p90/p99 request-recovery latency (s): shard declared dead →
+        victim request decodable again on the surviving shards."""
+        return self._pcts(self.recovery_latencies)
+
     def summary(self) -> Dict[str, float]:
         """Flat scalar summary (the dict bench_serving reports)."""
         out = {
@@ -113,9 +130,16 @@ class EngineStats:
             "prefill_tokens_skipped": self.prefill_tokens_skipped,
             "prefill_chunks_run": self.prefill_chunks_run,
             "max_prefill_slab_tokens": self.max_prefill_slab_tokens,
+            "shard_failures": self.shard_failures,
+            "shard_rejoins": self.shard_rejoins,
+            "transient_faults_recovered": self.transient_faults_recovered,
+            "fault_retries": self.fault_retries,
+            "straggle_steps": self.straggle_steps,
+            "requests_recovered": self.requests_recovered,
         }
         for name, pcts in (("ttft", self.ttft_percentiles()),
-                           ("tbt", self.tbt_percentiles())):
+                           ("tbt", self.tbt_percentiles()),
+                           ("recovery", self.recovery_percentiles())):
             for p, v in pcts.items():
                 out[f"{name}_{p}_s"] = v
         return out

@@ -34,7 +34,18 @@ private copy of just that block (placed by the SAME round-robin slot rule,
 so the shard-balance invariant survives forking), the donor keeps the
 original untouched.
 
-Invariants (hypothesis-tested in tests/test_kvcache.py):
+Shard quarantine (fault recovery): a shard the engine declares dead is
+masked out of the allocator (``quarantine_shard``) — the round-robin slot
+rule walks the LIVE shards only, and every capacity view (``num_free``,
+``capacity_blocks``, ``can_allocate``) drops to the survivors, so the
+admission/headroom guards honour degraded capacity. The dead shard's free
+list is retained: victim sequences release their refs through the normal
+refcount path (a block shared by K sharers returns once, when the last ref
+drops) and the blocks drain back in place, unallocatable until
+``rejoin_shard`` restores the shard.
+
+Invariants (hypothesis-tested in tests/test_kvcache.py and
+tests/test_fault_tolerance.py):
   * a block's refcount == the number of live tables referencing it,
   * free + referenced == total (a block is free iff its refcount is zero),
   * an UNSHARED block is owned by at most one sequence,
@@ -42,7 +53,9 @@ Invariants (hypothesis-tested in tests/test_kvcache.py):
   * freeing decrements refcounts and returns exactly the blocks that hit
     zero, each to the shard that owns it,
   * a writer never mutates a block another live sequence references
-    (copy-on-write forks first).
+    (copy-on-write forks first),
+  * no allocation ever lands on a quarantined shard, and rejoin restores
+    exactly the blocks that drained back to the shard's free list.
 """
 from __future__ import annotations
 
@@ -71,15 +84,31 @@ class PoolExhausted(OutOfBlocks):
     the signal the preemption-capable scheduling policy consumes (and the
     clear error FCFS surfaces instead of failing deep in the allocator).
 
+    ``quarantined_shards`` / ``live_shards`` carry the DEGRADED-capacity
+    context when shard faults have quarantined part of the pool: an
+    operator reading the error can distinguish "pool too small" (no
+    quarantined shards) from "pool degraded" (exhaustion against the
+    surviving shards only — e.g. during post-fault re-admission).
+
     Subclasses :class:`OutOfBlocks` so pre-existing handlers keep working.
     """
 
     def __init__(self, message: str, *, rid: Optional[int] = None,
-                 live_tokens: int = 0, free_blocks: int = 0):
+                 live_tokens: int = 0, free_blocks: int = 0,
+                 quarantined_shards: Tuple[int, ...] = (),
+                 live_shards: Tuple[int, ...] = ()):
         super().__init__(message)
         self.rid = rid
         self.live_tokens = live_tokens
         self.free_blocks = free_blocks
+        self.quarantined_shards = tuple(quarantined_shards)
+        self.live_shards = tuple(live_shards)
+
+    @property
+    def degraded(self) -> bool:
+        """True when the exhaustion happened against a fault-degraded pool
+        (some shards quarantined) rather than a simply-too-small one."""
+        return bool(self.quarantined_shards)
 
 
 @dataclasses.dataclass
@@ -104,6 +133,10 @@ class PagedKVCache:
         # per-shard free lists: shard s owns global ids [s·npb, (s+1)·npb)
         self._free_shard: List[List[int]] = [
             list(range(s * npb, (s + 1) * npb)) for s in range(self.n_shards)]
+        # shards quarantined by the fault-recovery path: their free lists
+        # are retained (blocks drain back in as victims release refs) but
+        # masked out of every allocation / capacity view until rejoin
+        self._quarantined: set = set()
         self.tables: Dict[int, List[int]] = {}
         self.lengths: Dict[int, int] = {}
         # block id -> number of live tables referencing it (only blocks that
@@ -135,27 +168,82 @@ class PagedKVCache:
 
     @property
     def free(self) -> List[int]:
-        """All free block ids (flattened across shards) — read-only view."""
-        return [b for shard in self._free_shard for b in shard]
+        """All ALLOCATABLE free block ids (flattened across live shards;
+        a quarantined shard's drained blocks are excluded) — read-only."""
+        return [b for s, shard in enumerate(self._free_shard)
+                for b in shard if s not in self._quarantined]
 
     @property
     def num_free(self) -> int:
-        """Count of free blocks — O(shards), unlike ``len(self.free)``
-        which materialises every id (the per-iteration pressure checks
-        run this on the serving hot loop)."""
-        return sum(len(s) for s in self._free_shard)
+        """Count of allocatable free blocks — O(shards), unlike
+        ``len(self.free)`` which materialises every id (the per-iteration
+        pressure checks run this on the serving hot loop). Quarantined
+        shards contribute nothing."""
+        return sum(len(s) for i, s in enumerate(self._free_shard)
+                   if i not in self._quarantined)
+
+    # ---------------- shard health (fault-recovery surface) ----------------
+    @property
+    def live_shards(self) -> List[int]:
+        """Shards currently accepting allocations (not quarantined)."""
+        return [s for s in range(self.n_shards) if s not in self._quarantined]
+
+    @property
+    def quarantined_shards(self) -> Tuple[int, ...]:
+        return tuple(sorted(self._quarantined))
+
+    @property
+    def capacity_blocks(self) -> int:
+        """Total blocks the pool can currently hold — ``num_blocks`` when
+        healthy, the surviving shards' share when degraded. Every
+        "can this request EVER fit" check must use this, not
+        ``num_blocks``: admission guards and stall detection otherwise
+        promise capacity a dead shard no longer provides."""
+        return self.blocks_per_shard * (self.n_shards -
+                                        len(self._quarantined))
+
+    def seqs_on_shard(self, shard: int) -> List[int]:
+        """Live sequences holding at least one block on `shard` — the
+        victim set a shard death forces through recovery (a sequence that
+        merely BORROWS a donor's block there is a victim too: its context
+        includes the lost bytes)."""
+        lo, hi = shard * self.blocks_per_shard, \
+            (shard + 1) * self.blocks_per_shard
+        return sorted(sid for sid, table in self.tables.items()
+                      if any(lo <= b < hi for b in table))
+
+    def quarantine_shard(self, shard: int) -> None:
+        """Mask `shard` out of the allocator: no new block lands on it and
+        every capacity view (``num_free`` / ``capacity_blocks`` /
+        ``can_allocate``) drops to the surviving shards. Its free list is
+        kept — blocks drain back as the recovery path releases victim
+        refs — but stays unallocatable until :meth:`rejoin_shard`."""
+        if not 0 <= shard < self.n_shards:
+            raise ValueError(f"shard {shard} outside [0, {self.n_shards})")
+        self._quarantined.add(shard)
+
+    def rejoin_shard(self, shard: int) -> None:
+        """Restore a quarantined shard's capacity (replacement hardware /
+        restarted worker). Only blocks that drained back to its free list
+        return — any block a live sequence somehow still references stays
+        referenced (refcounts are the single source of truth)."""
+        self._quarantined.discard(shard)
 
     def shard_of(self, block_id: int) -> int:
         return block_id // self.blocks_per_shard
 
     def _pop_block(self, seq_slot: int) -> int:
         """Pop a free block for a sequence's `seq_slot`-th table entry:
-        round-robin shard seq_slot mod n_shards, falling back to the
-        least-loaded (most-free) shard when the target is exhausted."""
-        target = seq_slot % self.n_shards
+        round-robin over the LIVE shards (quarantined shards are masked
+        out — the shard-masked round-robin keeps the balance invariant
+        over survivors), falling back to the least-loaded (most-free)
+        live shard when the target is exhausted."""
+        live = self.live_shards
+        if not live:
+            raise OutOfBlocks("every pool shard is quarantined")
+        target = live[seq_slot % len(live)]
         if not self._free_shard[target]:
-            target = max(range(self.n_shards),
-                         key=lambda s: len(self._free_shard[s]))
+            target = max(live, key=lambda s: len(self._free_shard[s]))
             if not self._free_shard[target]:
                 raise OutOfBlocks("pool exhausted")
         return self._free_shard[target].pop()
@@ -170,8 +258,23 @@ class PagedKVCache:
         return -(-n_tokens // self.block_size)
 
     def can_allocate(self, n_tokens: int) -> bool:
-        return sum(len(s) for s in self._free_shard) >= \
-            self.blocks_needed(n_tokens)
+        return self.num_free >= self.blocks_needed(n_tokens)
+
+    def _degraded_kw(self) -> Dict:
+        """PoolExhausted kwargs carrying the shard-health context — every
+        raise site attaches these so operators can tell "pool too small"
+        from "pool degraded by a shard fault"."""
+        return {"quarantined_shards": self.quarantined_shards,
+                "live_shards": tuple(self.live_shards)}
+
+    def _degraded_note(self) -> str:
+        if not self._quarantined:
+            return ""
+        q = sorted(self._quarantined)
+        return (f" [pool DEGRADED: shard(s) {q} quarantined after a fault; "
+                f"{len(self.live_shards)} of {self.n_shards} shards live, "
+                f"capacity {self.capacity_blocks} of {self.num_blocks} "
+                f"blocks]")
 
     def allocate(self, seq_id: int, n_tokens: int) -> None:
         """Give `seq_id` capacity for `n_tokens`. A fresh sequence gets a new
@@ -187,9 +290,13 @@ class PagedKVCache:
             assert n_tokens >= self.lengths[seq_id], \
                 f"seq {seq_id}: cannot shrink allocation"
             need = self.blocks_needed(n_tokens) - len(table)
-            have = sum(len(s) for s in self._free_shard)
+            have = self.num_free
             if need > have:
-                raise OutOfBlocks(f"need {need}, have {have}")
+                raise PoolExhausted(
+                    f"extending seq {seq_id}: need {need}, have {have}"
+                    f"{self._degraded_note()}",
+                    rid=seq_id, live_tokens=sum(self.lengths.values()),
+                    free_blocks=have, **self._degraded_kw())
             for i in range(len(table), len(table) + need):
                 b = self._pop_block(i)
                 self.refcounts[b] = 1
@@ -197,9 +304,13 @@ class PagedKVCache:
             self.lengths[seq_id] = n_tokens
             return
         need = self.blocks_needed(n_tokens)
-        have = sum(len(s) for s in self._free_shard)
+        have = self.num_free
         if need > have:
-            raise OutOfBlocks(f"need {need}, have {have}")
+            raise PoolExhausted(
+                f"allocating seq {seq_id}: need {need}, have {have}"
+                f"{self._degraded_note()}",
+                rid=seq_id, live_tokens=sum(self.lengths.values()),
+                free_blocks=have, **self._degraded_kw())
         # round-robin over shards: the sequence's i-th block lands on shard
         # i mod n_shards, so its KV spans every pool chip near-evenly
         table = [self._pop_block(i) for i in range(need)]
@@ -273,15 +384,16 @@ class PagedKVCache:
                 if self.refcounts[table[slot]] > 1:
                     self._cow_block(seq_id, slot)
         except OutOfBlocks:
-            free = sum(len(s) for s in self._free_shard)
+            free = self.num_free
             live = sum(self.lengths.values())
             raise PoolExhausted(
                 f"KV pool exhausted growing request {seq_id} to token "
                 f"{n}: {live} live tokens across {len(self.tables)} "
-                f"sequences occupy all {self.num_blocks} blocks "
-                f"({free} free) — preempt a victim or raise num_blocks",
-                rid=seq_id, live_tokens=live, free_blocks=free
-            ) from None
+                f"sequences occupy all {self.capacity_blocks} usable "
+                f"blocks ({free} free){self._degraded_note()} — preempt "
+                f"a victim or raise num_blocks",
+                rid=seq_id, live_tokens=live, free_blocks=free,
+                **self._degraded_kw()) from None
         self.lengths[seq_id] = n
 
     def free_seq(self, seq_id: int) -> None:
@@ -431,16 +543,16 @@ class PagedKVCache:
         S = k.shape[2]
         table = self.tables[seq_id]
         if start_token + S > len(table) * self.block_size:
-            free = sum(len(s) for s in self._free_shard)
+            free = self.num_free
             live = sum(self.lengths.values())
             raise PoolExhausted(
                 f"request {seq_id}: write_prefill of {S} tokens at "
                 f"{start_token} exceeds its allocated {len(table)} blocks × "
                 f"{self.block_size} (= {len(table) * self.block_size} "
                 f"tokens); pool holds {live} live tokens with {free} of "
-                f"{self.num_blocks} blocks free — allocate() must cover the "
-                f"prompt first", rid=seq_id, live_tokens=live,
-                free_blocks=free)
+                f"{self.num_blocks} blocks free{self._degraded_note()} — "
+                f"allocate() must cover the prompt first", rid=seq_id,
+                live_tokens=live, free_blocks=free, **self._degraded_kw())
         # within capacity, the token count must agree EXACTLY with the
         # sequence's allocated length — a short write used to zero-pad the
         # tail block silently while `lengths` claimed those tokens stored,
@@ -487,15 +599,16 @@ class PagedKVCache:
             try:
                 self.allocate(seq_id, target)
             except OutOfBlocks:
-                free = sum(len(s) for s in self._free_shard)
+                free = self.num_free
                 live = sum(self.lengths.values())
                 raise PoolExhausted(
                     f"KV pool exhausted growing request {seq_id}'s chunked "
                     f"prefill to token {target}: {live} live tokens across "
                     f"{len(self.tables)} sequences occupy all "
-                    f"{self.num_blocks} blocks ({free} free) — preempt a "
-                    f"victim or raise num_blocks", rid=seq_id,
-                    live_tokens=live, free_blocks=free) from None
+                    f"{self.capacity_blocks} usable blocks ({free} free)"
+                    f"{self._degraded_note()} — preempt a victim or raise "
+                    f"num_blocks", rid=seq_id, live_tokens=live,
+                    free_blocks=free, **self._degraded_kw()) from None
         self.write_prefill(seq_id, k, v, start_token=start_token)
 
     def write_token(self, seq_id: int, k: jax.Array, v: jax.Array,

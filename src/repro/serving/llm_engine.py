@@ -48,6 +48,27 @@ Sampling honours ``SamplingParams.seed``: each request draws token `i` from
 ``fold_in(PRNGKey(its seed), i)`` — its stochastic stream is independent of
 batch composition, admission order, and preemption, so identical requests
 reproduce identically wherever and whenever they run.
+
+Fault tolerance (``serving/faults.py``): cheap, numerous pool devices
+straggle, corrupt results, and die — the engine survives all three with
+greedy bit-parity intact. A :class:`~repro.serving.faults.FaultInjector`
+(deterministic, seeded scenarios) exercises the machinery at the host-side
+pool boundary; detection is a per-shard ``healthy → suspect → dead`` state
+machine fed by heartbeat probes and NaN/inf validation of the merged decode
+output, with bounded retry-with-backoff before a shard is declared dead.
+Recovery is the §5 preempt-and-recompute path: the dead shard is
+QUARANTINED (the allocator masks it out and every capacity/headroom guard
+drops to the surviving shards), every request holding blocks on it is
+evicted through the normal preemption path and re-admitted via recompute
+onto survivors — since KV is recomputable from prompt + generated tokens,
+outputs through a mid-decode shard death are bit-identical to a fault-free
+run (shared blocks recover once per physical block via the refcounts). A
+transient fault that clears within the retry budget recovers with no
+eviction at all, and a validated retry is bit-identical because the decode
+step is deterministic and nothing was committed before validation. NaN/inf
+that is NOT attributable to an injected fault raises
+:class:`CorruptedLogitsError` naming the requests and step — garbage is
+never silently sampled.
 """
 from __future__ import annotations
 
@@ -63,6 +84,7 @@ from repro.models import transformer
 from repro.models.common import ModelConfig
 from repro.serving.config import EngineConfig
 from repro.serving.engine import EngineStats
+from repro.serving.faults import DEAD, FaultInjector, ShardHealthTracker
 from repro.serving.kvcache import PagedKVCache, PoolExhausted
 from repro.serving.placement import PlacementStrategy, make_placement
 from repro.serving.request import Request, SamplingParams, State
@@ -75,11 +97,26 @@ class SchedulingStalled(RuntimeError):
     admitted — the engine would spin forever. Raised instead."""
 
 
+class CorruptedLogitsError(RuntimeError):
+    """Decode/prefill produced non-finite logits that no injected fault
+    accounts for — sampling from them would silently emit garbage tokens.
+    Carries the affected request ids and the engine step for triage."""
+
+    def __init__(self, message: str, *, rids: Sequence[int] = (),
+                 step: int = 0):
+        super().__init__(message)
+        self.rids = tuple(rids)
+        self.step = step
+
+
 @dataclasses.dataclass(frozen=True)
 class EngineEvent:
     """One iteration-level lifecycle event (the ``events()`` stream)."""
 
-    kind: str          # submit | admit | readmit | chunk | preempt | finish
+    # submit | admit | readmit | chunk | preempt | finish, plus the fault
+    # lifecycle: shard_suspect | retry | recover | shard_down | shard_up
+    # (shard-level events carry rid=-1 and name the shard in info["shard"])
+    kind: str
     rid: int
     step: int          # engine step counter when the event fired
     info: Dict = dataclasses.field(default_factory=dict)
@@ -140,10 +177,17 @@ class LLMEngine:
     """The unified serving facade: one engine, every placement."""
 
     def __init__(self, cfg: ModelConfig, params,
-                 engine_config: Optional[EngineConfig] = None, **overrides):
+                 engine_config: Optional[EngineConfig] = None,
+                 fault_injector: Optional[FaultInjector] = None,
+                 **overrides):
         """``overrides`` are EngineConfig fields for call-site convenience:
         ``LLMEngine(cfg, params, placement="attention_pool", partition=
-        "block")`` ≡ passing the equivalent validated EngineConfig."""
+        "block")`` ≡ passing the equivalent validated EngineConfig.
+
+        ``fault_injector`` attaches a deterministic fault scenario
+        (``serving/faults.py``) at the pool boundary; the health machine
+        and recovery paths are always live — the injector only supplies
+        the faults."""
         if cfg.family not in ("dense", "moe", "vlm"):
             raise ValueError("engine serves KV-cache architectures; "
                              f"got family={cfg.family}")
@@ -203,6 +247,16 @@ class LLMEngine:
         # depend on the whole group), so MoE models share pool MEMORY but
         # recompute the full prompt, writing only the unshared suffix.
         self._skip_prefill_compute = cfg.family != "moe"
+        # fault tolerance: per-shard health machine (always live) plus the
+        # optional injector; _recovering maps a shard-death victim's rid to
+        # the wall-clock instant its shard was declared dead, closed out
+        # (into stats.recovery_latencies) when the request is decodable
+        # again on the surviving shards
+        self._fault = fault_injector
+        self.health = ShardHealthTracker(self.kv.n_shards,
+                                         econf.fault_retry_limit)
+        self._backoff_s = econf.fault_retry_backoff_s
+        self._recovering: Dict[int, float] = {}
         self._events: List[EngineEvent] = []
         self._step_no = 0
 
@@ -261,8 +315,13 @@ class LLMEngine:
         or chunked admission that only seeds a prefill cursor), resolve
         pool pressure (possibly preempting), advance at most one prefill
         chunk, decode one token for every running request whose prefill is
-        complete, retire the finished."""
+        complete, retire the finished. Fault bookkeeping (rejoins,
+        heartbeat probes, straggler observation) runs first, so a shard
+        death detected at the step boundary is recovered before this very
+        step's admission wave — the evicted victims re-admit immediately
+        onto the surviving shards."""
         self._step_no += 1
+        self._fault_tick()
         while True:
             admitted = self.sched.admit()
             for req in admitted:
@@ -291,14 +350,24 @@ class LLMEngine:
         if not self.sched.running and self.sched.waiting:
             head = self.sched.waiting[0]
             need = self.sched.stored_tokens(head) + self.sched.decode_headroom
-            raise SchedulingStalled(
-                f"request {head.rid} needs {self.kv.blocks_needed(need)} "
-                f"blocks ({need} tokens incl. headroom) but the pool only "
-                f"has {self.kv.num_blocks} blocks total "
-                f"({len(self.kv.free)} free) and nothing is running — it "
-                f"can never be admitted; shrink the prompt or grow "
-                f"num_blocks")
+            blocks = self.kv.blocks_needed(need)
+            # degraded pool with a rejoin on the schedule: the head may fit
+            # once the quarantined shard returns — idle this step instead
+            # of declaring a permanent stall
+            waitable = (self.kv.quarantined_shards
+                        and self._fault is not None
+                        and self._fault.pending_rejoins(self._step_no)
+                        and blocks <= self.kv.num_blocks)
+            if not waitable:
+                raise SchedulingStalled(
+                    f"request {head.rid} needs {blocks} "
+                    f"blocks ({need} tokens incl. headroom) but the pool "
+                    f"only has {self.kv.capacity_blocks} blocks "
+                    f"({self.kv.num_free} free) and nothing is running — "
+                    f"it can never be admitted; shrink the prompt or grow "
+                    f"num_blocks" + self.kv._degraded_note())
         self._prefill_chunk_iteration()
+        self._note_recoveries()
         self._decode_iteration()
         self._retire()
 
@@ -316,6 +385,146 @@ class LLMEngine:
         for req in self.sched.retire_finished():
             self.stats.observe_request(req)
             self._emit("finish", req.rid, tokens=len(req.output))
+
+    def cancel_all(self) -> int:
+        """Graceful shutdown: cancel every in-flight request (running AND
+        waiting), freeing their pool blocks and marking each FINISHED so
+        handle iterators terminate cleanly. Partial outputs are kept —
+        every already-yielded token stays final. Returns the number of
+        requests cancelled."""
+        cancelled = self.sched.cancel_all()
+        now = time.time()
+        for req in cancelled:
+            req.state = State.FINISHED
+            req.finish_s = now
+            self.stats.observe_request(req)
+            self._emit("finish", req.rid, tokens=len(req.output),
+                       cancelled=True)
+        self._recovering.clear()
+        return len(cancelled)
+
+    # ------------------------------------------------------------------
+    # fault detection / recovery
+    # ------------------------------------------------------------------
+    def _fault_tick(self) -> None:
+        """Per-step fault bookkeeping at the pool boundary: scheduled
+        rejoins restore quarantined capacity, stragglers are observed
+        (slow is suspect, not wrong — no eviction), then every live shard
+        is heartbeat-probed with bounded retry-with-backoff. A shard that
+        answers within the retry budget recovers (transient blip, no
+        eviction); one that doesn't is declared dead and its requests are
+        recovered via :meth:`_handle_shard_death`."""
+        if self._fault is None:
+            return
+        self._fault.begin_step(self._step_no)
+        for s in self._fault.rejoins(self._step_no):
+            if self.health.is_dead(s):
+                self.kv.rejoin_shard(s)
+                self.health.mark_up(s)
+                self.stats.shard_rejoins += 1
+                self._emit("shard_up", -1, shard=s,
+                           capacity_blocks=self.kv.capacity_blocks)
+        for s, delay in self._fault.straggles(self._step_no):
+            if self.health.is_dead(s):
+                continue
+            self.stats.straggle_steps += 1
+            if delay > 0:
+                time.sleep(delay)
+            self._emit("shard_suspect", -1, shard=s, cause="straggler",
+                       delay_s=delay)
+            self._emit("recover", -1, shard=s, cause="straggler")
+        for s in range(self.kv.n_shards):
+            if self.health.is_dead(s):
+                continue
+            attempt = 0
+            suspected = False
+            while not self._fault.probe(s, self._step_no):
+                self.stats.fault_retries += 1
+                if not suspected:
+                    suspected = True
+                    self._emit("shard_suspect", -1, shard=s,
+                               cause="heartbeat")
+                if self.health.strike(s) == DEAD:
+                    self._handle_shard_death(s, cause="heartbeat")
+                    break
+                self._emit("retry", -1, shard=s, attempt=attempt + 1)
+                self._backoff(attempt)
+                attempt += 1
+            else:
+                if suspected:
+                    self.health.clear(s)
+                    self.stats.transient_faults_recovered += 1
+                    self._emit("recover", -1, shard=s, cause="heartbeat",
+                               retries=attempt)
+
+    def _handle_shard_death(self, shard: int, cause: str) -> None:
+        """Quarantine a dead shard and recover its requests: the allocator
+        masks the shard out (capacity drops to the survivors — every
+        admission/headroom guard sees the degraded pool), every request
+        holding blocks there is evicted through the normal preemption path
+        (generated tokens kept), and re-admission recomputes its KV onto
+        the surviving shards — the §5 path, so greedy outputs are
+        bit-identical to a fault-free run. Shared/CoW blocks need no
+        special casing: eviction drops refcounts, survivors keep their
+        physical blocks, and each physical block recovers at most once.
+
+        Eviction bypasses ``policy.select_victim`` deliberately: shard
+        death names its victims by block placement, not by scheduling
+        policy, so recovery works under ``fcfs`` too — and MID-PREFILL
+        victims are allowed here (their prefill cursor resets with the
+        eviction), the one place that invariant yields."""
+        t0 = time.time()
+        victims = set(self.kv.seqs_on_shard(shard))
+        # quarantine BEFORE freeing: the dead shard's blocks must not be
+        # handed back out to the re-admission wave
+        self.kv.quarantine_shard(shard)
+        self.stats.shard_failures += 1
+        self._emit("shard_down", -1, shard=shard, cause=cause,
+                   victims=sorted(victims),
+                   live_shards=list(self.kv.live_shards),
+                   capacity_blocks=self.kv.capacity_blocks)
+        for r in list(self.sched.running):
+            if r.rid in victims:
+                freed = self.sched.preempt(r)
+                self.stats.preemptions = self.sched.n_preemptions
+                self._emit("preempt", r.rid, freed_blocks=freed,
+                           generated_tokens=len(r.output),
+                           cause="shard_down")
+                self._recovering[r.rid] = t0
+
+    def _note_recoveries(self) -> None:
+        """Close out recovery-latency timers: a shard-death victim counts
+        as recovered the moment it is decodable again (running, prefill
+        complete) on the surviving shards."""
+        if not self._recovering:
+            return
+        for r in self.sched.running:
+            t0 = self._recovering.get(r.rid)
+            if t0 is not None and self.sched.prefill_done(r.rid):
+                lat = time.time() - t0
+                del self._recovering[r.rid]
+                self.stats.recovery_latencies.append(lat)
+                self.stats.requests_recovered += 1
+                self._emit("recover", r.rid, latency_s=lat,
+                           cause="readmitted")
+
+    def _backoff(self, attempt: int) -> None:
+        if self._backoff_s > 0:
+            time.sleep(self._backoff_s * (2 ** attempt))
+
+    def _guard_finite(self, reqs: List[Request], logits: jax.Array) -> None:
+        """Refuse to sample from non-finite logits (satellite guard — live
+        with or without an injector): name the offending requests and the
+        engine step instead of silently emitting garbage tokens."""
+        finite = np.asarray(jnp.isfinite(logits).all(axis=-1))
+        if bool(finite.all()):
+            return
+        bad = [r.rid for r, ok in zip(reqs, finite) if not ok]
+        raise CorruptedLogitsError(
+            f"non-finite logits at engine step {self._step_no} for "
+            f"request(s) {bad} — refusing to sample; no injected fault "
+            f"accounts for this (check model numerics / KV integrity)",
+            rids=bad, step=self._step_no)
 
     # ------------------------------------------------------------------
     # prefill / recompute
@@ -475,13 +684,14 @@ class LLMEngine:
         raise PoolExhausted(
             f"KV pool exhausted mid chunked prefill: request "
             f"{req.rid} needs {need} blocks for its next chunk and "
-            f"{free} of {self.kv.num_blocks} are free "
+            f"{free} of {self.kv.capacity_blocks} are free "
             f"({sum(self.kv.lengths.values())} live tokens across "
             f"{len(self.kv.tables)} sequences) with no running "
-            f"decoder left to retire: {fix}",
+            f"decoder left to retire: {fix}" + self.kv._degraded_note(),
             rid=req.rid,
             live_tokens=sum(self.kv.lengths.values()),
-            free_blocks=free)
+            free_blocks=free,
+            **self.kv._degraded_kw())
 
     # ------------------------------------------------------------------
     # decode
@@ -501,10 +711,14 @@ class LLMEngine:
         tables, lens = self.kv.block_table_batch(ids)
         tokens = jnp.asarray([r.output[-1] for r in running], jnp.int32)
         t0 = time.time()
-        logits, updates = self._decode_jit(
-            self.params, tokens, self.kv.k_pool, self.kv.v_pool,
-            jnp.asarray(tables), jnp.asarray(lens), *extra)
-        logits.block_until_ready()
+        out = self._decode_validated(running, tokens, tables, lens, extra)
+        if out is None:
+            # a shard died mid-decode: this iteration is aborted with
+            # NOTHING committed (no append, no pool write, no sample) —
+            # its victims were evicted, survivors decode next step with
+            # outputs unchanged, so greedy bit-parity holds
+            return
+        logits, updates = out
         dt = time.time() - t0
         # placement is the memory pool's job: append the input token's K/V
         # (allocator bookkeeping per sequence, then ONE batched scatter)
@@ -521,6 +735,53 @@ class LLMEngine:
         self.stats.tokens_generated += len(running)
         self.stats.batch_sizes.append(len(running))
         self.stats.step_times.append(dt)
+
+    def _decode_validated(self, running: List[Request], tokens, tables,
+                          lens, extra):
+        """Run the jitted decode step and VALIDATE the merged output
+        before anything is committed (no token append, no pool write, no
+        sampling has happened yet). Injected corruption — NaN partials
+        from a pool shard, the stand-in for a per-shard checksum / sender
+        identity a real RPC fabric attaches — strikes the shard and
+        retries; the decode step is deterministic, so a retry that
+        succeeds is bit-identical to an unfaulted step. Strikes past the
+        retry budget declare the shard dead (returns ``None`` — the
+        caller aborts the iteration; victims were already evicted).
+        Non-finite logits NO fault accounts for raise
+        :class:`CorruptedLogitsError`."""
+        attempt = 0
+        suspect = None
+        while True:
+            logits, updates = self._decode_jit(
+                self.params, tokens, self.kv.k_pool, self.kv.v_pool,
+                jnp.asarray(tables), jnp.asarray(lens), *extra)
+            logits.block_until_ready()
+            shard = None
+            if self._fault is not None:
+                logits, shard = self._fault.filter_decode(self._step_no,
+                                                          logits)
+            if bool(jnp.isfinite(logits).all()):
+                if suspect is not None:
+                    self.health.clear(suspect)
+                    self.stats.transient_faults_recovered += 1
+                    self._emit("recover", -1, shard=suspect,
+                               cause="corrupt_partial", retries=attempt)
+                return logits, updates
+            if shard is None:
+                # non-finite output with no injected fault to blame: the
+                # always-on guard refuses to sample garbage
+                self._guard_finite(running, logits)
+            if suspect is None:
+                suspect = shard
+                self._emit("shard_suspect", -1, shard=shard,
+                           cause="corrupt_partial")
+            self.stats.fault_retries += 1
+            if self.health.strike(shard) == DEAD:
+                self._handle_shard_death(shard, cause="corrupt_partial")
+                return None
+            self._emit("retry", -1, shard=shard, attempt=attempt + 1)
+            self._backoff(attempt)
+            attempt += 1
 
     def _resolve_pool_pressure(self, running: List[Request]
                                ) -> List[Request]:
@@ -549,13 +810,15 @@ class LLMEngine:
                 raise PoolExhausted(
                     f"KV pool exhausted: request {g.rid} "
                     f"({self.kv.lengths[g.rid]} stored tokens) needs a "
-                    f"block and {free} of {self.kv.num_blocks} are free "
-                    f"({sum(self.kv.lengths.values())} live tokens across "
-                    f"{len(self.kv.tables)} sequences); the "
-                    f"{self.policy.name!r} policy found no victim: {fix}",
+                    f"block and {free} of {self.kv.capacity_blocks} are "
+                    f"free ({sum(self.kv.lengths.values())} live tokens "
+                    f"across {len(self.kv.tables)} sequences); the "
+                    f"{self.policy.name!r} policy found no victim: "
+                    f"{fix}" + self.kv._degraded_note(),
                     rid=g.rid,
                     live_tokens=sum(self.kv.lengths.values()),
-                    free_blocks=free)
+                    free_blocks=free,
+                    **self.kv._degraded_kw())
             freed = self.sched.preempt(victim)
             # the scheduler's counter is the source of truth; stats mirrors
             # it (assignment, not increment — the two can never diverge)
@@ -568,6 +831,7 @@ class LLMEngine:
     # sampling (per-request PRNG streams — SamplingParams.seed honoured)
     # ------------------------------------------------------------------
     def _sample(self, reqs: List[Request], logits: jax.Array) -> jax.Array:
+        self._guard_finite(reqs, logits)
         keys = jnp.stack([self._request_key(r) for r in reqs])
         temps = np.asarray([r.params.temperature for r in reqs], np.float32)
         topks = np.asarray([r.params.top_k for r in reqs], np.int32)

@@ -378,8 +378,10 @@ class RequestScheduler:
                 # (only the oldest prefill progresses, so a younger
                 # partial prompt's holdings are stuck until it finishes —
                 # decoder holdings, by contrast, free as they retire).
+                # capacity_blocks, not num_blocks: a fault-quarantined
+                # shard's blocks are not coming back until rejoin
                 if self.kv.blocks_needed(stored + self.decode_headroom) > \
-                        self.kv.num_blocks:
+                        self.kv.capacity_blocks:
                     break
                 first = min(chunk, stored - shared)
                 if not self._chunked_commitment_ok(donor, shared, first):
@@ -447,7 +449,7 @@ class RequestScheduler:
             stuck.difference_update(self.kv.tables[o.rid])
             need_o = self.kv.blocks_needed(self.stored_tokens(o) +
                                            self.decode_headroom)
-            if need_o + len(stuck) + new_fresh > self.kv.num_blocks:
+            if need_o + len(stuck) + new_fresh > self.kv.capacity_blocks:
                 return False
         return True
 
@@ -512,6 +514,19 @@ class RequestScheduler:
             self._release(r.rid)
         self.running = [r for r in self.running if r.state != State.FINISHED]
         return done
+
+    def cancel_all(self) -> List[Request]:
+        """Cleanly cancel every in-flight request (graceful shutdown):
+        running requests release their pool blocks (refcount-aware, same
+        path as retire/preempt), waiting requests are simply dequeued.
+        Returns every cancelled request, running first — the caller marks
+        states and emits events."""
+        cancelled = list(self.running) + list(self.waiting)
+        for r in self.running:
+            self._release(r.rid)
+        self.running = []
+        self.waiting = []
+        return cancelled
 
     def has_work(self) -> bool:
         return bool(self.waiting or self.running)
