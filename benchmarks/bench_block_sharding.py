@@ -23,7 +23,7 @@ from benchmarks.common import time_call
 from repro.configs import registry
 from repro.models import transformer
 from repro.serving import EngineConfig, LLMEngine
-from repro.serving.disagg_engine import BYTES
+from repro.serving.worker_pool import BYTES
 from repro.serving.kvcache import PagedKVCache
 
 N_WORKERS = 4

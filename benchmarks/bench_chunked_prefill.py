@@ -29,7 +29,7 @@ import numpy as np
 
 from repro.configs import registry
 from repro.serving import EngineConfig, LLMEngine, Request, SamplingParams
-from repro.serving.disagg_engine import BYTES
+from repro.serving.worker_pool import BYTES
 
 BLOCK_SIZE = 16
 

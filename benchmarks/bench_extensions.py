@@ -8,7 +8,7 @@ import jax.numpy as jnp
 from benchmarks.common import time_call
 from repro.configs import registry
 from repro.core import costmodel as cm
-from repro.serving.moe_offload import min_bandwidth_moe, transfer_bytes_moe
+from repro.serving.worker_pool import min_bandwidth_moe, transfer_bytes_moe
 
 
 def run(quick: bool = False):

@@ -23,7 +23,7 @@ import numpy as np
 
 from repro.configs import registry
 from repro.serving import EngineConfig, LLMEngine, Request, SamplingParams
-from repro.serving.disagg_engine import BYTES
+from repro.serving.worker_pool import BYTES
 from repro.serving.kvcache import PagedKVCache
 from repro.serving.scheduler import RequestScheduler
 
@@ -88,7 +88,7 @@ def run(quick: bool = False):
                                        True)
 
         # ---- TTFT with prefill-skip (measured engine, outputs checked) ----
-        from repro.serving.engine import EngineStats
+        from repro.serving.stats import EngineStats
         res = {}
         for share in (False, True):
             eng = LLMEngine(cfg, params, EngineConfig(

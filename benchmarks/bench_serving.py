@@ -55,7 +55,7 @@ def run(quick: bool = False):
     n_reqs = 3 if quick else 12
     for trace_name in ("azure-conv",) if quick else ("azure-conv",
                                                      "azure-code"):
-        res = {}
+        res, outs = {}, {}
         for engine_name, placement in (("vllm", "homogeneous"),
                                        ("lamina", "attention_pool")):
             reqs = traces.generate(trace_name, n_reqs, cfg.vocab_size,
@@ -64,6 +64,7 @@ def run(quick: bool = False):
                 placement=placement, max_batch=8, num_blocks=256))
             eng.submit(reqs)
             res[engine_name] = eng.run().summary()
+            outs[engine_name] = [r.output for r in reqs]
         lam = res["lamina"]
         rows.append({
             "name": f"fig10_measured_{trace_name}",
@@ -81,6 +82,34 @@ def run(quick: bool = False):
                 f"prefill_tokens_skipped={lam['prefill_tokens_skipped']};"
                 f"prefill_chunks_run={lam['prefill_chunks_run']};"
                 f"max_prefill_slab_tokens={lam['max_prefill_slab_tokens']};"
-                f"outputs_identical=True"),
+                f"outputs_identical={outs['vllm'] == outs['lamina']}"),
+        })
+
+        # the same trace through the disaggregated prefill/decode split
+        # (serving/cluster/): 2 replica pairs behind the affinity router,
+        # KV handed off block-granularly — transfer volume, handoff
+        # latency, and routing hits are the new observables
+        from repro.serving.cluster import DisaggCluster
+        reqs = traces.generate(trace_name, n_reqs, cfg.vocab_size,
+                               scale=0.01, seed=0)
+        cluster = DisaggCluster(cfg, params, EngineConfig(
+            placement="attention_pool", max_batch=8, num_blocks=256),
+            replicas=2)
+        cluster.submit(reqs)
+        cluster.run()
+        s = cluster.summary()
+        rows.append({
+            "name": f"fig10_measured_disagg_{trace_name}",
+            "us_per_call": round(s["handoff_p50_s"] * 1e6),
+            "derived": (
+                f"replicas={s['replicas']};routing={s['routing']};"
+                f"kv_bytes_transferred={s['kv_bytes_transferred']};"
+                f"handoffs_completed={s['handoffs_completed']};"
+                f"handoff_p50_ms={s['handoff_p50_s'] * 1e3:.2f};"
+                f"handoff_p90_ms={s['handoff_p90_s'] * 1e3:.2f};"
+                f"router_affinity_hits={s['router_affinity_hits']};"
+                f"handoff_retries={s['handoff_retries']};"
+                f"outputs_identical="
+                f"{[r.output for r in reqs] == outs['lamina']}"),
         })
     return rows

@@ -1,0 +1,113 @@
+"""Diff two benchmark snapshot sets (the ``BENCH_<label>.json`` files
+``benchmarks.run --json-dir`` writes): flag per-row timing regressions.
+
+  PYTHONPATH=src python -m benchmarks.diff BASELINE_DIR CURRENT_DIR \
+      [--threshold 0.15] [--fail-on-regression] [--only fig10]
+
+Rows are matched (label, name); a row whose ``us_per_call`` grew by more
+than ``--threshold`` (default 15%) over the baseline is a REGRESSION,
+one that shrank by more is an improvement, the band between is noise.
+Rows with a zero/absent baseline timing (derived-only measurements) are
+compared for presence only. Added and removed rows/labels are reported
+informationally — coverage changes are a review surface, not a failure.
+
+Exit status: 0, or 1 with ``--fail-on-regression`` when any regression
+was flagged (CI wires this against the committed ``benchmarks/baseline``
+snapshots, non-blocking — runner timing variance is real).
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+from typing import Dict, Tuple
+
+
+def load_snapshots(dirname: str) -> Dict[str, dict]:
+    """label -> snapshot doc for every BENCH_*.json in `dirname`."""
+    docs = {}
+    for path in sorted(glob.glob(os.path.join(dirname, "BENCH_*.json"))):
+        with open(path) as f:
+            doc = json.load(f)
+        docs[doc.get("label", os.path.basename(path))] = doc
+    if not docs:
+        raise FileNotFoundError(f"no BENCH_*.json snapshots in {dirname!r}")
+    return docs
+
+
+def _rows(doc: dict) -> Dict[str, dict]:
+    return {r["name"]: r for r in doc.get("rows", [])}
+
+
+def diff_rows(base: Dict[str, dict], cur: Dict[str, dict],
+              threshold: float, only: str = ""
+              ) -> Tuple[list, list, list, list]:
+    """Returns (regressions, improvements, added, removed); each entry is
+    (label, name, base_us, cur_us, rel_delta)."""
+    regressions, improvements, added, removed = [], [], [], []
+    labels = sorted(set(base) | set(cur))
+    for label in labels:
+        if only and only not in label:
+            continue
+        brows = _rows(base[label]) if label in base else {}
+        crows = _rows(cur[label]) if label in cur else {}
+        for name in sorted(set(brows) | set(crows)):
+            if name not in brows:
+                added.append((label, name))
+                continue
+            if name not in crows:
+                removed.append((label, name))
+                continue
+            b = float(brows[name].get("us_per_call") or 0)
+            c = float(crows[name].get("us_per_call") or 0)
+            if b <= 0:
+                continue        # derived-only row: presence already checked
+            rel = c / b - 1.0
+            entry = (label, name, b, c, rel)
+            if rel > threshold:
+                regressions.append(entry)
+            elif rel < -threshold:
+                improvements.append(entry)
+    return regressions, improvements, added, removed
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="diff two BENCH_*.json snapshot directories")
+    ap.add_argument("baseline", help="directory of baseline snapshots")
+    ap.add_argument("current", help="directory of current snapshots")
+    ap.add_argument("--threshold", type=float, default=0.15,
+                    help="relative us_per_call growth that counts as a "
+                         "regression (default 0.15 = +15%%)")
+    ap.add_argument("--fail-on-regression", action="store_true",
+                    help="exit 1 when any regression is flagged")
+    ap.add_argument("--only", default="",
+                    help="restrict to labels containing this substring")
+    args = ap.parse_args(argv)
+
+    base = load_snapshots(args.baseline)
+    cur = load_snapshots(args.current)
+    regressions, improvements, added, removed = diff_rows(
+        base, cur, args.threshold, args.only)
+
+    print("status,label,name,base_us,cur_us,delta")
+    for tag, entries in (("REGRESSION", regressions),
+                         ("improvement", improvements)):
+        for label, name, b, c, rel in entries:
+            print(f"{tag},{label},{name},{b:.0f},{c:.0f},{rel:+.1%}")
+    for label, name in added:
+        print(f"added,{label},{name},,,")
+    for label, name in removed:
+        print(f"removed,{label},{name},,,")
+    print(f"# {len(regressions)} regression(s) over "
+          f"{args.threshold:.0%}, {len(improvements)} improvement(s), "
+          f"{len(added)} added, {len(removed)} removed", file=sys.stderr)
+    if regressions and args.fail_on_regression:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

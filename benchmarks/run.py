@@ -40,6 +40,7 @@ MODULES = [
     ("prefix_sharing", "benchmarks.bench_prefix_sharing"),
     ("chunked_prefill", "benchmarks.bench_chunked_prefill"),
     ("fault_recovery", "benchmarks.bench_fault_recovery"),
+    ("disagg_cluster", "benchmarks.bench_disagg_cluster"),
     ("sec7_extensions", "benchmarks.bench_extensions"),
 ]
 

@@ -20,7 +20,7 @@ from repro.configs import registry
 from repro.core import converter, pipeline
 from repro.models import blocks, transformer
 from repro.serving import EngineConfig, LLMEngine, Request, SamplingParams
-from repro.serving.disagg_engine import expected_transfer_bytes
+from repro.serving.worker_pool import expected_transfer_bytes
 
 
 def main():

@@ -17,7 +17,7 @@ from repro.configs import registry
 from repro.data import traces
 from repro.models import transformer
 from repro.serving import EngineConfig, LLMEngine
-from repro.serving.disagg_engine import expected_transfer_bytes
+from repro.serving.worker_pool import expected_transfer_bytes
 
 
 def main():

@@ -7,12 +7,27 @@ three placements — and the scheduler is pluggable (fcfs | preempt).
 
   (or: PYTHONPATH=src python -m repro.launch.serve ...)
 
+``--mode`` selects the deployment role (serving/cluster/):
+
+  * ``engine``  — the unified single engine (default, the path above);
+  * ``router``  — a full disaggregated cluster: ``--replicas`` paired
+    prefill/decode engines behind the prefix-affinity router
+    (``--routing``), KV handed off block-granularly at
+    ``--transfer-blocks-per-step`` blocks per step;
+  * ``prefill`` — a standalone prefill tier: admit + prefill + export
+    only, handoff payloads drained from the outbox (reports export
+    volume and retained prefix donors);
+  * ``decode``  — a standalone decode tier fed by an in-process prefill
+    feeder (the transport seam a real RPC fabric would replace); reports
+    the transfer/handoff-latency surface.
+
 Fault injection (``--fault-scenario``) attaches a deterministic, seeded
 fault schedule at the attention-pool boundary — shard death / transient /
 corrupt / straggle — and the run reports the recovery counters and
-recovery-latency percentiles. Ctrl-C shuts down gracefully: in-flight
-requests are cancelled (partial outputs kept) and the stats summary always
-prints.
+recovery-latency percentiles (in router mode the schedule attaches to
+decode replica 0 — the transfer-interruption path). Ctrl-C shuts down
+gracefully: in-flight requests are cancelled (partial outputs kept) and
+the stats summary always prints.
 """
 from __future__ import annotations
 
@@ -22,6 +37,26 @@ import argparse
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--mode", default="engine",
+                    choices=["engine", "prefill", "decode", "router"],
+                    help="deployment role: unified engine (default), "
+                         "standalone prefill/decode tier, or the routed "
+                         "disaggregated cluster")
+    ap.add_argument("--replicas", type=int, default=2,
+                    help="prefill/decode replica pairs (--mode router)")
+    ap.add_argument("--routing", default="affinity",
+                    choices=["affinity", "random", "least_loaded"],
+                    help="request routing policy (--mode router)")
+    ap.add_argument("--affinity-blocks", type=int, default=2,
+                    help="leading full prompt blocks hashed into the "
+                         "prefix-affinity routing key")
+    ap.add_argument("--transfer-blocks-per-step", type=int, default=8,
+                    help="KV blocks a decode replica lands per engine "
+                         "step while draining its transfer queue "
+                         "(0 = a whole payload per step)")
+    ap.add_argument("--no-retain-prefixes", action="store_true",
+                    help="free exported prompts immediately instead of "
+                         "retaining them as prefix-sharing donors")
     ap.add_argument("--placement", default="attention_pool",
                     choices=["homogeneous", "attention_pool", "moe_offload"])
     ap.add_argument("--engine", default=None, choices=["vllm", "lamina"],
@@ -99,6 +134,11 @@ def main() -> None:
     injector = None
     if args.fault_scenario:
         injector = FaultInjector(FaultScenario.parse(args.fault_scenario))
+
+    if args.mode != "engine":
+        _run_disagg(args, cfg, params, econf, reqs, injector)
+        return
+
     eng = LLMEngine(cfg, params, econf, fault_injector=injector)
     eng.submit(reqs)
     # graceful shutdown: Ctrl-C cancels the in-flight requests (pool blocks
@@ -155,6 +195,95 @@ def main() -> None:
     if eng.expert_pool is not None:
         elog = eng.expert_pool.log
         print(f"expert pool transfers={elog.transfers} bytes={elog.total}")
+
+
+def _run_disagg(args, cfg, params, econf, reqs, injector) -> None:
+    """The disaggregated roles: standalone prefill / decode tier, or the
+    full routed cluster (--mode router)."""
+    from repro.serving import DisaggConfig
+    from repro.serving.cluster import (DecodeEngine, DisaggCluster,
+                                       PrefillEngine)
+
+    disagg = DisaggConfig(
+        transfer_blocks_per_step=args.transfer_blocks_per_step,
+        retain_prefixes=not args.no_retain_prefixes)
+
+    if args.mode == "router":
+        cluster = DisaggCluster(
+            cfg, params, econf, replicas=args.replicas,
+            disagg=disagg, routing=args.routing,
+            affinity_blocks=args.affinity_blocks,
+            decode_faults={0: injector} if injector else None,
+            seed=args.seed)
+        cluster.submit(reqs)
+        try:
+            cluster.run()
+        except KeyboardInterrupt:
+            print("\ninterrupted — reporting partial cluster stats")
+        s = cluster.summary()
+        print(f"mode=router replicas={s['replicas']} "
+              f"routing={s['routing']} requests={s['requests']} "
+              f"tokens={s['tokens_generated']} "
+              f"handoffs={s['handoffs_completed']} "
+              f"retries={s['handoff_retries']}")
+        print(f"router affinity_hits={s['router_affinity_hits']} "
+              f"prefill_tokens_skipped={s['prefill_tokens_skipped']} "
+              f"blocks_shared={s['blocks_shared']}")
+        print(f"kv_bytes_transferred={s['kv_bytes_transferred']} "
+              f"handoff_ms p50={s['handoff_p50_s']*1e3:.1f} "
+              f"p90={s['handoff_p90_s']*1e3:.1f} "
+              f"p99={s['handoff_p99_s']*1e3:.1f}")
+        for p in s["per_replica"]:
+            print(f"  replica {p['replica']}: healthy={p['healthy']} "
+                  f"handoffs={p['handoffs_completed']} "
+                  f"kv_bytes={p['kv_bytes_transferred']} "
+                  f"affinity_hits={p['router_affinity_hits']} "
+                  f"skipped={p['prefill_tokens_skipped']}")
+        return
+
+    if args.mode == "prefill":
+        eng = PrefillEngine(cfg, params, econf,
+                            disagg=disagg.replace(role="prefill"),
+                            fault_injector=injector)
+        eng.submit(reqs)
+        exported = []
+        while eng.has_work():
+            eng.step()
+            exported.extend(eng.collect_handoffs())
+        s = eng.stats
+        print(f"mode=prefill requests={len(reqs)} "
+              f"exported={len(exported)} "
+              f"kv_bytes_exported={s.kv_bytes_transferred} "
+              f"payload_blocks={sum(h.payload.n_blocks for h in exported)} "
+              f"retained_donors={len(eng.retained_rids)} "
+              f"prefill_tokens_skipped={s.prefill_tokens_skipped}")
+        return
+
+    # --mode decode: an in-process prefill feeder plays the remote tier
+    feeder = PrefillEngine(cfg, params, econf,
+                           disagg=disagg.replace(role="prefill"))
+    eng = DecodeEngine(cfg, params, econf,
+                       disagg=disagg.replace(role="decode"),
+                       fault_injector=injector)
+    feeder.on_handoff = eng.enqueue_handoff
+    feeder.submit(reqs)
+    while feeder.has_work() or eng.has_work():
+        if feeder.has_work():
+            feeder.step()
+        if eng.has_work():
+            eng.step()
+    s = eng.stats.summary()
+    print(f"mode=decode requests={len(reqs)} "
+          f"tokens={s['tokens_generated']} "
+          f"handoffs={s['handoffs_completed']} "
+          f"retries={s['handoff_retries']} "
+          f"kv_bytes_transferred={s['kv_bytes_transferred']} "
+          f"max_prefill_slab_tokens={s['max_prefill_slab_tokens']}")
+    print(f"handoff_ms p50={s['handoff_p50_s']*1e3:.1f} "
+          f"p90={s['handoff_p90_s']*1e3:.1f} "
+          f"p99={s['handoff_p99_s']*1e3:.1f}  "
+          f"tbt_ms p50={s['tbt_p50_s']*1e3:.1f} "
+          f"p90={s['tbt_p90_s']*1e3:.1f}")
 
 
 if __name__ == "__main__":

@@ -13,15 +13,20 @@ The canonical surface is the unified streaming facade::
     for ev in engine.events():    # admit / preempt / readmit / finish
         ...
 
-The legacy classes (``Engine``, ``DisaggEngine``, ``MoEOffloadEngine``) are
-deprecated and kept only as greedy-parity oracles for the facade's tests;
-import them from their own modules.
+A prefill/decode disaggregated deployment fronts K engine replicas with
+the cluster layer (``repro.serving.cluster``)::
+
+    from repro.serving.cluster import DisaggCluster
+
+    cluster = DisaggCluster(cfg, params, econf, replicas=4)
+    cluster.submit(requests)      # prefix-affinity routed
+    cluster.run()
 """
-from repro.serving.config import EngineConfig
-from repro.serving.engine import EngineStats
+from repro.serving.config import DisaggConfig, EngineConfig
 from repro.serving.faults import (FaultEvent, FaultInjector, FaultScenario,
                                   ShardHealthTracker)
-from repro.serving.kvcache import OutOfBlocks, PagedKVCache, PoolExhausted
+from repro.serving.kvcache import (KVHandoffPayload, OutOfBlocks,
+                                   PagedKVCache, PoolExhausted)
 from repro.serving.llm_engine import (CorruptedLogitsError, EngineEvent,
                                       LLMEngine, RequestHandle,
                                       SchedulingStalled)
@@ -32,14 +37,16 @@ from repro.serving.scheduler import (ChunkedPrefillPolicy, FCFSPolicy,
                                      PreemptingPolicy, PrefixIndex,
                                      RequestScheduler, SchedulingPolicy,
                                      make_policy)
+from repro.serving.stats import EngineStats
 
 __all__ = [
-    "EngineConfig", "EngineStats", "EngineEvent", "LLMEngine",
-    "RequestHandle", "SchedulingStalled", "CorruptedLogitsError",
+    "EngineConfig", "DisaggConfig", "EngineStats", "EngineEvent",
+    "LLMEngine", "RequestHandle", "SchedulingStalled",
+    "CorruptedLogitsError",
     "FaultEvent", "FaultInjector", "FaultScenario", "ShardHealthTracker",
     "PlacementStrategy",
     "make_placement", "Request", "SamplingParams", "State",
-    "PagedKVCache", "OutOfBlocks", "PoolExhausted",
+    "PagedKVCache", "KVHandoffPayload", "OutOfBlocks", "PoolExhausted",
     "request_key", "sample_per_request",
     "ChunkedPrefillPolicy", "FCFSPolicy", "PreemptingPolicy", "PrefixIndex",
     "RequestScheduler", "SchedulingPolicy", "make_policy",

@@ -5,8 +5,8 @@ The paper's thesis is that model-attention disaggregation is a *placement*
 decision, not a different engine: the same continuous-batching loop runs
 whether attention (and optionally the MoE experts) execute fused on the
 model workers or on a memory-optimized pool. ``EngineConfig`` makes that
-decision declarative — one validated dataclass replaces the constructor
-kwarg sprawl of the legacy ``Engine`` → ``DisaggEngine`` →
+decision declarative — one validated dataclass replaced the constructor
+kwarg sprawl of the deleted legacy ``Engine`` → ``DisaggEngine`` →
 ``MoEOffloadEngine`` inheritance tower:
 
   * ``placement``:  ``homogeneous`` (vLLM-style baseline — every operator on
@@ -167,4 +167,53 @@ class EngineConfig:
         return 1
 
     def replace(self, **kw) -> "EngineConfig":
+        return dataclasses.replace(self, **kw)
+
+
+DISAGG_ROLES = ("prefill", "decode")
+
+
+@dataclasses.dataclass(frozen=True)
+class DisaggConfig:
+    """Prefill/decode disaggregation knobs — drives the
+    :class:`~repro.serving.cluster.PrefillEngine` /
+    :class:`~repro.serving.cluster.DecodeEngine` split of ``LLMEngine``
+    (serving/cluster/). One instance is shared by a replica pair; ``role``
+    names which side an engine plays.
+    """
+
+    role: str = "prefill"
+    # simulated wire budget: physical KV blocks a decode replica lands per
+    # engine step while draining its TransferQueue. 0 = unbounded (a whole
+    # payload imports in one step). Small values stretch transfers over
+    # several steps — the window the interrupted-by-shard-death tests hit.
+    transfer_blocks_per_step: int = 8
+    # prefill-side prefix retention: an exported request's prompt blocks
+    # stay resident (and registered in the PrefixIndex) as donor prefixes,
+    # LRU-evicted under pool pressure — same-prefix followers routed to
+    # this prefill engine skip their shared prefill. Only effective with
+    # EngineConfig.prefix_sharing.
+    retain_prefixes: bool = True
+    max_retained_seqs: int = 32
+    # transfer attempts per handoff before the decode replica gives up and
+    # raises a contextual HandoffError (each mid-transfer shard death
+    # resets + requeues the handoff and burns one attempt)
+    max_transfer_attempts: int = 3
+
+    def __post_init__(self):
+        if self.role not in DISAGG_ROLES:
+            raise ValueError(f"role must be one of {DISAGG_ROLES}; "
+                             f"got {self.role!r}")
+        if self.transfer_blocks_per_step < 0:
+            raise ValueError(
+                f"transfer_blocks_per_step must be >= 0 (0 = unbounded); "
+                f"got {self.transfer_blocks_per_step}")
+        if self.max_retained_seqs < 0:
+            raise ValueError(f"max_retained_seqs must be >= 0; "
+                             f"got {self.max_retained_seqs}")
+        if self.max_transfer_attempts < 1:
+            raise ValueError(f"max_transfer_attempts must be >= 1; "
+                             f"got {self.max_transfer_attempts}")
+
+    def replace(self, **kw) -> "DisaggConfig":
         return dataclasses.replace(self, **kw)

@@ -703,3 +703,179 @@ class PagedKVCache:
         v = jnp.transpose(v, (0, 2, 3, 4, 1, 5)).reshape(
             L, B, nb * self.block_size, Hkv, -1)[:, :, :pad_len]
         return k, v, jnp.asarray(lens)
+
+    # ---------------- block-granular KV handoff (disaggregated cluster) ----
+    def export_seqs(self, seq_ids: Sequence[int]) -> "KVHandoffPayload":
+        """Serialize the given sequences' KV state into a block-granular
+        :class:`KVHandoffPayload` — the prefill→decode wire unit of the
+        disaggregated cluster (serving/cluster/).
+
+        The payload carries each sequence's LOGICAL table (its source block
+        ids, in slot order) plus every referenced PHYSICAL block exactly
+        once: a block shared by several exported sequences (refcounted
+        prefix sharing) appears once in ``block_ids`` / the stacked tiles,
+        so sharing survives the wire without re-transferring bytes. Tiles
+        stay in the pool's head-major ``(L, Hkv, n, bs, hd)`` layout — the
+        importer scatters them block-by-block into its own pool (the
+        no-densify invariant holds across the wire: no dense seq-major view
+        is ever built on either side).
+
+        The source sequences are NOT freed — the prefill engine decides
+        whether to retain them as prefix donors or release them."""
+        missing = [sid for sid in seq_ids if sid not in self.tables]
+        if missing:
+            raise ValueError(
+                f"export_seqs: sequence(s) {missing} have no table in this "
+                f"pool — only admitted, prefilled sequences can be exported")
+        ids: List[int] = []
+        seen: set = set()
+        for sid in seq_ids:
+            for b in self.tables[sid]:
+                if b not in seen:
+                    seen.add(b)
+                    ids.append(b)
+        idx = jnp.asarray(ids, jnp.int32)
+        # one device gather per payload, then host-side tiles (the "wire")
+        k = np.asarray(self.k_pool[:, :, idx])
+        v = np.asarray(self.v_pool[:, :, idx])
+        return KVHandoffPayload(
+            tables={sid: tuple(self.tables[sid]) for sid in seq_ids},
+            lengths={sid: self.lengths[sid] for sid in seq_ids},
+            block_ids=tuple(ids), k_blocks=k, v_blocks=v,
+            block_size=self.block_size)
+
+    def prealloc_handoff(self, payload: "KVHandoffPayload"
+                         ) -> Dict[int, int]:
+        """Phase 1 of a handoff import: reserve destination blocks for every
+        sequence in `payload` and rebuild its table/refcount/length state —
+        no bytes move yet (that is :meth:`write_handoff_blocks`, the
+        incremental phase 2 a decode replica's TransferQueue drives).
+
+        Each UNIQUE source physical block gets exactly ONE destination
+        block, popped by the same round-robin slot rule as a local
+        allocation (using the slot of its first referencing table entry, so
+        the shard-balance invariant survives the wire); per-sequence tables
+        are then rebuilt through the src→dst mapping and refcounts are set
+        to the number of referencing tables — shared prefixes stay shared
+        on the destination pool. Returns the src→dst block-id mapping the
+        transfer phase scatters through.
+
+        Raises contextual :class:`PoolExhausted` (degraded-shard context
+        included) when the destination pool cannot cover the payload; on
+        failure nothing is allocated (all-or-nothing)."""
+        if payload.block_size != self.block_size:
+            raise ValueError(
+                f"prealloc_handoff: payload block_size "
+                f"({payload.block_size}) != destination pool block_size "
+                f"({self.block_size}) — handoff is block-granular and "
+                f"never re-chunks tiles")
+        for rid in payload.tables:
+            if rid in self.tables:
+                raise ValueError(
+                    f"prealloc_handoff: seq {rid} already has a table on "
+                    f"the destination pool — a handoff import must land on "
+                    f"a fresh rid")
+        need = len(payload.block_ids)
+        have = self.num_free
+        if need > have:
+            live = sum(self.lengths.values())
+            raise PoolExhausted(
+                f"handoff prealloc of {len(payload.tables)} seq(s) needs "
+                f"{need} blocks, have {have}{self._degraded_note()}",
+                rid=next(iter(payload.tables)), live_tokens=live,
+                free_blocks=have, **self._degraded_kw())
+        # slot of each unique block's FIRST reference drives placement
+        first_slot: Dict[int, int] = {}
+        for table in payload.tables.values():
+            for slot, b in enumerate(table):
+                first_slot.setdefault(b, slot)
+        mapping: Dict[int, int] = {}
+        try:
+            for b in payload.block_ids:
+                mapping[b] = self._pop_block(first_slot[b])
+        except OutOfBlocks:
+            for dst in mapping.values():   # all-or-nothing: roll back
+                self._free_shard[self.shard_of(dst)].append(dst)
+            live = sum(self.lengths.values())
+            raise PoolExhausted(
+                f"handoff prealloc exhausted the pool after "
+                f"{len(mapping)} of {need} blocks{self._degraded_note()}",
+                rid=next(iter(payload.tables)), live_tokens=live,
+                free_blocks=self.num_free, **self._degraded_kw()) from None
+        owners: Dict[int, int] = {}     # dst block -> first referencing rid
+        for rid, src_table in payload.tables.items():
+            dst_table = [mapping[b] for b in src_table]
+            self.tables[rid] = dst_table
+            self.lengths[rid] = payload.lengths[rid]
+            for d in dst_table:
+                self.refcounts[d] = self.refcounts.get(d, 0) + 1
+                owners.setdefault(d, rid)
+        for rid, src_table in payload.tables.items():
+            borrowed = {mapping[b] for b in src_table
+                        if owners[mapping[b]] != rid}
+            if borrowed:
+                self._borrowed[rid] = borrowed
+        return mapping
+
+    def write_handoff_blocks(self, payload: "KVHandoffPayload",
+                             mapping: Dict[int, int],
+                             start: int, stop: int) -> int:
+        """Phase 2 of a handoff import: land payload blocks [start, stop)
+        (indices into ``payload.block_ids``) at their mapped destination
+        ids — one batched block-granular scatter, never a dense view. The
+        sub-range IS the simulated wire budget: a decode replica's
+        TransferQueue calls this with ``transfer_blocks_per_step`` blocks
+        per engine step. Returns the bytes written."""
+        ids = payload.block_ids[start:stop]
+        if not ids:
+            return 0
+        dst = jnp.asarray([mapping[b] for b in ids], jnp.int32)
+        k = jnp.asarray(payload.k_blocks[:, :, start:stop])
+        v = jnp.asarray(payload.v_blocks[:, :, start:stop])
+        self.k_pool = self.k_pool.at[:, :, dst].set(k)
+        self.v_pool = self.v_pool.at[:, :, dst].set(v)
+        return payload.bytes_of_blocks(stop - start)
+
+    def import_seqs(self, payload: "KVHandoffPayload") -> Dict[int, int]:
+        """One-shot import: prealloc + write every payload block. The
+        decode replicas drive the two phases separately (incremental
+        transfer); this convenience wrapper serves tests and single-step
+        callers. Returns the src→dst mapping."""
+        mapping = self.prealloc_handoff(payload)
+        self.write_handoff_blocks(payload, mapping, 0, payload.n_blocks)
+        return mapping
+
+
+@dataclasses.dataclass(frozen=True)
+class KVHandoffPayload:
+    """Block-granular KV handoff unit (prefill engine → decode replica).
+
+    ``tables`` keeps each sequence's logical block chain in SOURCE ids;
+    ``block_ids`` lists every referenced physical block exactly once (a
+    refcount-shared block transfers once per physical block, not once per
+    sharer), in the order the stacked head-major tiles ``k_blocks`` /
+    ``v_blocks`` ``(L, Hkv, n_unique, bs, hd)`` are packed. The importer
+    never sees source pool geometry beyond the ids — `prealloc_handoff`
+    remaps them onto its own shards (source and destination pools may have
+    different ``n_shards``)."""
+    tables: Dict[int, Tuple[int, ...]]
+    lengths: Dict[int, int]
+    block_ids: Tuple[int, ...]
+    k_blocks: np.ndarray
+    v_blocks: np.ndarray
+    block_size: int
+
+    @property
+    def n_blocks(self) -> int:
+        return len(self.block_ids)
+
+    @property
+    def nbytes(self) -> int:
+        """Total wire bytes (K + V tiles)."""
+        return int(self.k_blocks.nbytes + self.v_blocks.nbytes)
+
+    def bytes_of_blocks(self, n: int) -> int:
+        """Wire bytes of `n` payload blocks (K + V)."""
+        if not self.n_blocks:
+            return 0
+        return int(self.nbytes * n // self.n_blocks)

@@ -4,8 +4,8 @@ One engine serves every placement the paper studies. Placement is a
 declarative :class:`~repro.serving.config.EngineConfig` decision
 (``homogeneous`` | ``attention_pool`` | ``moe_offload`` × ``head`` |
 ``request`` | ``block``), realised by a composable
-:class:`~repro.serving.placement.PlacementStrategy` instead of the legacy
-``Engine`` → ``DisaggEngine`` → ``MoEOffloadEngine`` inheritance tower; and
+:class:`~repro.serving.placement.PlacementStrategy` instead of the deleted
+legacy ``Engine`` → ``DisaggEngine`` → ``MoEOffloadEngine`` tower; and
 scheduling is a pluggable :class:`~repro.serving.scheduler.SchedulingPolicy`
 (FCFS, or preemption under pool pressure with recompute re-admission).
 
@@ -83,7 +83,7 @@ import numpy as np
 from repro.models import transformer
 from repro.models.common import ModelConfig
 from repro.serving.config import EngineConfig
-from repro.serving.engine import EngineStats
+from repro.serving.stats import EngineStats
 from repro.serving.faults import DEAD, FaultInjector, ShardHealthTracker
 from repro.serving.kvcache import PagedKVCache, PoolExhausted
 from repro.serving.placement import PlacementStrategy, make_placement
@@ -322,6 +322,7 @@ class LLMEngine:
         onto the surviving shards."""
         self._step_no += 1
         self._fault_tick()
+        self._pre_admit_tick()
         while True:
             admitted = self.sched.admit()
             for req in admitted:
@@ -358,7 +359,7 @@ class LLMEngine:
                         and self._fault is not None
                         and self._fault.pending_rejoins(self._step_no)
                         and blocks <= self.kv.num_blocks)
-            if not waitable:
+            if not waitable and not self._stall_waiver():
                 raise SchedulingStalled(
                     f"request {head.rid} needs {blocks} "
                     f"blocks ({need} tokens incl. headroom) but the pool "
@@ -373,13 +374,33 @@ class LLMEngine:
 
     def run(self, max_steps: int = 10_000) -> EngineStats:
         steps = 0
-        while self.sched.has_work() and steps < max_steps:
+        while self.has_work() and steps < max_steps:
             self.step()
             steps += 1
         return self.stats
 
     def has_work(self) -> bool:
         return self.sched.has_work()
+
+    # ------------------------------------------------------------------
+    # disaggregation hooks (serving/cluster/ overrides these)
+    # ------------------------------------------------------------------
+    def _pre_admit_tick(self) -> None:
+        """Hook between fault bookkeeping and this step's admission wave.
+        The disaggregated cluster engines live here: a DecodeEngine drains
+        its Prealloc→Transfer→Waiting handoff queues (so a transfer that
+        completes this step joins this step's decode batch), a
+        PrefillEngine evicts retained prefix donors under pool pressure
+        (so retained blocks never block the admission the stall check is
+        about to judge). Runs AFTER ``_fault_tick`` so a shard death this
+        step is visible to mid-transfer recovery."""
+
+    def _stall_waiver(self) -> bool:
+        """Hook: return True to suppress this step's SchedulingStalled
+        check. A DecodeEngine with handoffs in flight waives it — the
+        queued imports hold pool blocks while nothing is running yet, a
+        state the single-engine stall logic would misread as permanent."""
+        return False
 
     def _retire(self) -> None:
         for req in self.sched.retire_finished():

@@ -35,10 +35,9 @@ from repro.models.common import ModelConfig, rms_norm
 from repro.models.ffn import ffn_forward
 from repro.models.moe import moe_forward
 from repro.serving.config import EngineConfig
-from repro.serving.disagg_engine import (BYTES, AttentionWorkerPool,
-                                         TransferLog)
 from repro.serving.kvcache import PagedKVCache
-from repro.serving.moe_offload import ExpertWorkerPool
+from repro.serving.worker_pool import (BYTES, AttentionWorkerPool,
+                                       ExpertWorkerPool, TransferLog)
 
 
 def _tree_index(tree, i):

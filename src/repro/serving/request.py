@@ -16,6 +16,10 @@ class State(enum.Enum):
     # evicted under pool pressure; blocks returned to the pool, generated
     # tokens kept — re-admission recomputes the KV by re-prefilling
     PREEMPTED = "preempted"
+    # disaggregated cluster: prefill finished on the prefill engine, KV
+    # blocks in flight to (or queued on) a decode replica — the request
+    # belongs to no scheduler until transfer-complete admission
+    TRANSFERRING = "transferring"
     FINISHED = "finished"
 
 

@@ -1,16 +1,14 @@
 """Iteration-level scheduling for the serving engines.
 
-Two generations live here:
-
-  * :class:`Scheduler` — the original Orca-style FCFS admitter used by the
-    legacy ``Engine``/``DisaggEngine`` classes (kept verbatim as the parity
-    oracle; slated for deletion with them).
-  * :class:`SchedulingPolicy` + :class:`RequestScheduler` — the pluggable
-    scheduler behind :class:`repro.serving.llm_engine.LLMEngine`. The
-    policy decides *who* gets admitted and *who* gets evicted under pool
-    pressure; the scheduler owns the queues and the KV-pool bookkeeping
-    (allocate on admit, free on retire/preempt). This is the hook surface
-    the ROADMAP's prefix-sharing and chunked-prefill items plug into.
+:class:`SchedulingPolicy` + :class:`RequestScheduler` — the pluggable
+scheduler behind :class:`repro.serving.llm_engine.LLMEngine`. The
+policy decides *who* gets admitted and *who* gets evicted under pool
+pressure; the scheduler owns the queues and the KV-pool bookkeeping
+(allocate on admit, free on retire/preempt). This is the hook surface
+the prefix-sharing, chunked-prefill, and disaggregated-cluster layers
+plug into (transfer-complete admission enters through
+:meth:`RequestScheduler.admit_prefilled`). The legacy Orca-style
+``Scheduler`` that served the deleted oracle engines is gone.
 
 Preemption model (``PreemptingPolicy``): when a decode iteration needs more
 blocks than the pool has free (requests outliving their ``decode_headroom``
@@ -30,48 +28,6 @@ from typing import (Dict, List, Optional, Protocol, Sequence, Set, Tuple,
 
 from repro.serving.kvcache import PagedKVCache
 from repro.serving.request import Request, State
-
-
-@dataclasses.dataclass
-class Scheduler:
-    """Legacy FCFS admitter (pre-``LLMEngine``; parity oracle only)."""
-
-    kv: PagedKVCache
-    max_batch: int
-    decode_headroom: int = 8     # extra tokens reserved per admitted request
-
-    def __post_init__(self):
-        self.waiting: List[Request] = []
-        self.running: List[Request] = []
-
-    def submit(self, reqs: List[Request]) -> None:
-        self.waiting.extend(reqs)
-
-    def admit(self) -> List[Request]:
-        """Move as many waiting requests to running as memory allows.
-        Returns the newly admitted requests (they need prefill)."""
-        admitted = []
-        while self.waiting and len(self.running) < self.max_batch:
-            req = self.waiting[0]
-            need = len(req.prompt) + self.decode_headroom
-            if not self.kv.can_allocate(need):
-                break
-            self.waiting.pop(0)
-            self.kv.allocate(req.rid, len(req.prompt))
-            req.state = State.RUNNING
-            self.running.append(req)
-            admitted.append(req)
-        return admitted
-
-    def retire_finished(self) -> List[Request]:
-        done = [r for r in self.running if r.state == State.FINISHED]
-        for r in done:
-            self.kv.free_seq(r.rid)
-        self.running = [r for r in self.running if r.state != State.FINISHED]
-        return done
-
-    def has_work(self) -> bool:
-        return bool(self.waiting or self.running)
 
 
 # ======================================================================
@@ -259,7 +215,7 @@ class PrefixIndex:
 class RequestScheduler:
     """Queue + KV-pool bookkeeping behind ``LLMEngine``.
 
-    Differences from the legacy :class:`Scheduler`:
+    Design points:
       * the admission/eviction *decisions* are delegated to a
         :class:`SchedulingPolicy`;
       * preempted requests are supported end to end: :meth:`preempt` frees
@@ -417,6 +373,33 @@ class RequestScheduler:
             self.running.append(req)
             admitted.append(req)
         return admitted
+
+    def admit_prefilled(self, req: Request) -> bool:
+        """Transfer-complete admission (disaggregated cluster): `req`'s KV
+        is ALREADY resident in this pool — its block table, refcounts, and
+        stored length were rebuilt by ``PagedKVCache.prealloc_handoff`` and
+        every block's bytes have landed — so admission skips allocation AND
+        prefill entirely: the request joins the prebuilt decode batch with
+        only batch-slot and bookkeeping work. The ``SchedulingPolicy``
+        still governs it from here on (it is a normal ``running`` member
+        for victim selection and retirement). Returns False when the batch
+        is full this iteration — the caller's WaitingQueue holds the
+        request (its blocks stay resident) and retries next step."""
+        if len(self.running) >= self.max_batch:
+            return False
+        if req.rid not in self.kv.tables:
+            raise ValueError(
+                f"admit_prefilled: request {req.rid} has no imported block "
+                f"table in this pool — the handoff transfer must complete "
+                f"(prealloc + every block written) before admission")
+        self._shared[req.rid] = 0
+        if self.prefix_index is not None:
+            # an imported request is as good a donor as a locally prefilled
+            # one: its blocks are resident and its table covers the prompt
+            self.prefix_index.register(req.rid, req.prompt)
+        req.state = State.RUNNING
+        self.running.append(req)
+        return True
 
     def _chunked_commitment_ok(self, donor: Optional[int], shared: int,
                                first: int) -> bool:

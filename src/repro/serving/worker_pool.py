@@ -1,64 +1,40 @@
-"""Lamina: the model-attention disaggregated serving engine (paper §4).
+"""Memory-device worker pools + wire-byte accounting (paper §4.2.2, §7).
 
-Logical realisation of the paper's architecture, runnable on CPU and
-lowerable on the TPU mesh:
+Canonical home of the pieces every placement strategy composes, rehomed
+from the deleted legacy engine modules (``disagg_engine.py`` /
+``moe_offload.py`` — their ``Engine``/``DisaggEngine``/``MoEOffloadEngine``
+classes survived only as parity oracles and are gone; LLMEngine-vs-LLMEngine
+cross-config checks replaced them):
 
-  * model workers execute the converter's slices (norm/QKV then
-    o-proj/FFN) — the slice boundaries are exactly the min-cut the
-    converter finds (context = the residual stream);
-  * an AttentionWorkerPool owns the attention computation, partitioned
-    across the DOP's `b` workers (paper §5, Fig. 9) one of three ways:
+  * :class:`AttentionWorkerPool` — owns partitioning + accounting of
+    attention work over the engine's paged block pool, one of three ways:
     "head" (each worker owns Hkv/n heads of every pool block — Lamina's
     choice), "block" (the pool's block axis is sharded and a single
     sequence's round-robin-placed blocks span every worker; per-worker
-    §4.2.2 partials merge exactly via the combine identity — the partition
-    that serves `long_500k` where one request's KV exceeds one chip), or
-    "request" (batch-sharded, the load-imbalance baseline). NO partition
-    ever materialises a dense seq-major KV view — each worker reads its own
+    §4.2.2 partials merge exactly via the combine identity), or "request"
+    (batch-sharded, the load-imbalance baseline). NO partition ever
+    materialises a dense seq-major KV view — each worker reads its own
     slice of the block pool in place (the no-densify invariant,
     core/attention_parallel.py);
-  * every per-layer transfer (send-Q, send-KV, recv-output) is accounted in
-    bytes — tests assert the per-iteration total equals the paper's
-    (2 + 2/G)·e·d·B·L formula (§3.1);
-  * the pool's KV read is PAGED: workers attend over the engine's head-major
-    block pool in place through per-sequence block tables
-    (``attend_paged``) — per-step traffic is one pass over the live KV, with
-    no dense gather or transposes on the hot path;
-  * resource-utilisation overlapping (§4.2.2): attention over the `prev`
-    tokens is issued as soon as q is available; the `new` token's
-    contribution is merged with the combine identity after K/V arrive. The
-    engine tracks the two sub-latencies so the overlap benchmark (Fig. 14)
-    can report hidden-vs-exposed time.
-
-DEPRECATED (DisaggEngine only): new code should use
-:class:`repro.serving.llm_engine.LLMEngine` with
-``EngineConfig(placement="attention_pool", partition=...)`` — the sliced
-decode step now lives in ``serving/placement.py`` as a composable strategy
-instead of a subclass override. ``DisaggEngine`` is kept verbatim as the
-greedy-parity oracle for the facade's tests. ``AttentionWorkerPool`` (and
-its transfer accounting) remains canonical and is what the new placement
-strategies compose.
+  * :func:`expected_transfer_bytes` — the paper's §3.1 per-iteration wire
+    formula (2 + 2/G)·e·d_q·B·L that tests assert the pool's log matches;
+  * :class:`ExpertWorkerPool` — MoE expert offloading (paper §7): expert
+    weights live on memory-optimized workers with the same byte-accounting
+    contract, plus the analytic bounds ``transfer_bytes_moe`` /
+    ``min_bandwidth_moe``.
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import combine as C
-from repro.models import transformer
-from repro.models.attention import qkv_project, out_project
-from repro.models.common import ModelConfig, rms_norm
-from repro.models.ffn import ffn_forward
-from repro.models.moe import moe_forward
-from repro.serving.engine import Engine
+from repro.core import costmodel as cm
+from repro.models.common import ModelConfig
 
 BYTES = 2  # bf16/fp16 wire format (paper Table 2 "e")
-
-
-def _tree_index(tree, i):
-    return jax.tree.map(lambda a: a[i], tree)
 
 
 @dataclasses.dataclass
@@ -262,7 +238,7 @@ class AttentionWorkerPool:
 
         worker_tokens: (n_workers,) live tokens each worker's partition
         reads this iteration (data-dependent, so logged host-side — see
-        DisaggEngine._decode_iteration, which derives them per partition);
+        LLMEngine._decode_iteration, which derives them per partition);
         kv_head_fraction scales for head partitioning (each worker reads
         only Hkv/n heads of every token)."""
         hd = self.cfg.resolved_head_dim
@@ -285,139 +261,52 @@ def expected_transfer_bytes(cfg: ModelConfig, batch: int) -> int:
     return int((2 + 2 / G) * BYTES * cfg.q_dim * batch * cfg.num_layers)
 
 
-class DisaggEngine(Engine):
-    """Engine with model-attention disaggregation replacing the fused step."""
+def transfer_bytes_moe(cfg: ModelConfig, batch: int) -> int:
+    """Per-iteration wire bytes for expert offloading: token activations to
+    the pool and expert outputs back, per MoE layer."""
+    return int(2 * BYTES * cfg.d_model * batch * cfg.num_layers)
 
-    def __init__(self, cfg: ModelConfig, params, *, n_attention_workers=2,
-                 partition: str = "head", overlap: bool = True, **kw):
-        if partition == "block":
-            # the pool's block axis is sharded over the workers: the cache
-            # must place blocks round-robin across exactly that many shards
-            kw.setdefault("kv_shards", n_attention_workers)
-            if kw["kv_shards"] != n_attention_workers:
-                raise ValueError(
-                    f"block partition shards the pool over the workers: "
-                    f"kv_shards ({kw['kv_shards']}) must equal "
-                    f"n_attention_workers ({n_attention_workers})")
-        super().__init__(cfg, params, **kw)
-        self.pool = AttentionWorkerPool(cfg, n_attention_workers, partition,
-                                        kw.get("decode_backend", "jnp"))
-        self.overlap = overlap
-        self._pending_shard_args = None  # block partition, per iteration
-        self._decode_jit = jax.jit(self._disagg_decode)
 
-    def _decode_extra_args(self, ids) -> tuple:
-        """Block partition: ride the COMPACTED per-shard local tables +
-        positions into the jitted step so each worker walks only its own
-        ~1/n of the live blocks (block_table_shards). Normally stashed by
-        _decode_iteration (which also consumes the live-token counts for
-        accounting — one table walk, not two); computed fresh for callers
-        that bypass it (MoEOffloadEngine's iteration)."""
-        if self.pool.partition != "block":
-            return ()
-        args, self._pending_shard_args = self._pending_shard_args, None
-        if args is None:
-            lt, lp, _ = self.kv.block_table_shards(ids)
-            args = (jnp.asarray(lt), jnp.asarray(lp))
-        return args
+def min_bandwidth_moe(cfg: ModelConfig, batch: int, seq_len: float,
+                      hw_model: cm.HardwareSpec, hw_exp: cm.HardwareSpec,
+                      alpha: float = 0.2) -> float:
+    """Paper-§3.1 style minimum-bandwidth bound for the MoE boundary."""
+    t = cm.mtime(cfg, batch, hw_model) + cm.atime(cfg, batch, seq_len,
+                                                  hw_model)
+    return transfer_bytes_moe(cfg, batch) / (alpha * t)
 
-    # ----- the sliced decode step (converter output, executed) -----
-    def _disagg_decode(self, params, tokens, k_pool, v_pool, block_tables,
-                       lens, shard_tables=None, shard_positions=None):
+
+class ExpertWorkerPool:
+    """Memory-device pool owning the expert weights + FFN compute."""
+
+    def __init__(self, cfg: ModelConfig, n_workers: int = 2):
+        if cfg.num_experts % max(n_workers, 1):
+            raise ValueError(
+                f"expert partition needs num_experts ({cfg.num_experts}) "
+                f"divisible by workers ({n_workers})")
+        self.cfg = cfg
+        self.n = n_workers
+        self.log = TransferLog()
+        self.per_worker_tokens = [0] * n_workers
+
+    def run_experts(self, moe_params: Dict, x: jax.Array,
+                    account: bool = False) -> jax.Array:
+        """x: (B, S, d) routed-token activations arriving over the wire.
+        Expert-partitioned across workers: each worker computes the routed
+        contribution of its expert shard; outputs sum (experts are disjoint
+        per token choice, so partial outputs add exactly)."""
+        from repro.models.moe import moe_forward
+
         cfg = self.cfg
-        cur_len = lens  # stored tokens
-        x = jnp.take(params["embed"], tokens[:, None], axis=0)
-        if cfg.tie_embeddings:
-            x = x * jnp.asarray(jnp.sqrt(float(cfg.d_model)), x.dtype)
-        positions = cur_len[:, None]
-        ks, vs = [], []
-        for layer in range(cfg.num_layers):
-            p = _tree_index(params["layers"], layer)
-            is_local = cfg.local_global and layer % 2 == 0
-            window = cfg.sliding_window if (is_local or not cfg.local_global) \
-                else 0
-            # ---- model slice 0: norm1 + QKV (send q early — §4.2.2) ----
-            h = rms_norm(x, p["norm1"], cfg.norm_eps)
-            q, k, v = qkv_project(p["attn"], cfg, h, positions)
-            ks.append(k[:, 0])
-            vs.append(v[:, 0])
-            # ---- attention pool: workers read the paged pool in place ----
-            attn = self.pool.attend_paged(
-                q[:, 0], k_pool[layer], v_pool[layer], block_tables, cur_len,
-                k[:, 0], v[:, 0], sliding_window=int(window),
-                attention_sinks=cfg.attention_sinks if window else 0,
-                logit_softcap=cfg.attn_logit_softcap,
-                shard_tables=shard_tables, shard_positions=shard_positions)
-            # ---- model slice 1: o-proj + residual + FFN ----
-            attn_out = out_project(p["attn"], attn[:, None])
-            if cfg.post_norms:
-                attn_out = rms_norm(attn_out, p["norm_post_attn"],
-                                    cfg.norm_eps)
-            x = x + attn_out
-            h2 = rms_norm(x, p["norm2"], cfg.norm_eps)
-            if "moe" in p:
-                f, _ = moe_forward(p["moe"], cfg, h2)
-            else:
-                f = ffn_forward(p["ffn"], h2)
-            if cfg.post_norms:
-                f = rms_norm(f, p["norm_post_ffn"], cfg.norm_eps)
-            x = x + f
-        updates = {"k_new": jnp.stack(ks), "v_new": jnp.stack(vs),
-                   "len": cur_len + 1}
-        logits = transformer._head(params, cfg, x[:, 0])
-        return logits, updates
+        y, _ = moe_forward(moe_params, cfg, x)
+        if account:
+            self.log.q_bytes += x.size * BYTES       # activations out
+            self.log.out_bytes += y.size * BYTES     # expert outputs back
+            self.log.transfers += 2
+        return y
 
-    def _decode_iteration(self) -> None:
-        import numpy as np
-
-        from repro.serving.request import State
-        running = [r for r in self.sched.running if r.state == State.RUNNING]
-        if running:
-            # per-worker live-token KV-read accounting (data-dependent, so
-            # host-side: the jitted step's python body fires at trace only)
-            ids = [r.rid for r in running]
-            L = self.cfg.num_layers
-            if self.pool.partition == "block":
-                # one table walk serves both the jitted step's compacted
-                # shard tables and the live-token accounting
-                lt, lp, shard_tokens = self.kv.block_table_shards(ids)
-                self._pending_shard_args = (jnp.asarray(lt), jnp.asarray(lp))
-                self.pool.log_paged_kv(shard_tokens.sum(axis=1), L)
-            elif self.pool.partition == "head":
-                total = sum(self.kv.lengths[i] for i in ids)
-                self.pool.log_paged_kv([total] * self.pool.n, L,
-                                       kv_head_fraction=1.0 / self.pool.n)
-            else:  # request: each worker walks only its requests' tables
-                toks = [sum(self.kv.lengths[ids[i]] for i in idx)
-                        for idx in np.array_split(np.arange(len(ids)),
-                                                  self.pool.n)]
-                self.pool.log_paged_kv(toks, L)
-        super()._decode_iteration()
-        if running:
-            self.pool.log_iteration(len(running))
-
-    # ------------------------------------------------------------------
-    # Fault tolerance (paper §5): all request state (KV) lives on the
-    # attention pool, so a model-worker loss costs nothing; an attention-
-    # worker loss is recovered by re-prefilling from the request's prompt +
-    # already-generated tokens, which the front-end retains.
-    # ------------------------------------------------------------------
-    def fail_model_worker(self) -> None:
-        """Model workers are stateless — swap in a spare: re-jit only."""
-        self._decode_jit = jax.jit(self._disagg_decode)
-
-    def fail_attention_worker(self) -> None:
-        """Drop the pool's KV for every running request and rebuild it from
-        prompt + generated tokens (minus the last, still-unstored token)."""
-        from repro.serving.request import State
-        for req in self.sched.running:
-            if req.state != State.RUNNING:
-                continue
-            known = req.prompt + req.output[:-1]
-            self.kv.free_seq(req.rid)
-            self.kv.allocate(req.rid, len(known))
-            toks = jnp.asarray([known], jnp.int32)
-            _, cache = self._prefill_jit(self.params, {"tokens": toks})
-            # prefill cache is head-major (L, 1, Hkv, S, hd) — pool layout
-            self.kv.write_prefill(req.rid, cache["k"][:, 0],
-                                  cache["v"][:, 0])
+    def log_iteration(self, batch: int) -> None:
+        d, L = self.cfg.d_model, self.cfg.num_layers
+        self.log.q_bytes += batch * d * BYTES * L
+        self.log.out_bytes += batch * d * BYTES * L
+        self.log.transfers += 2 * L

@@ -1,0 +1,283 @@
+"""Disaggregated cluster (serving/cluster/): prefill/decode split parity,
+the decode-side handoff lifecycle, and prefix-affinity routing.
+
+The headline invariant is the parity matrix: greedy outputs through the
+prefill-engine → decode-engine block handoff are BIT-IDENTICAL to a
+single-engine run, for attention_pool × {head, request, block}, with
+prefix sharing AND chunked prefill enabled and the transfer stretched
+over multiple steps. Plus: the decode engine never prefills (prebuilt
+batches via ``admit_prefilled``), queue lifecycle event ordering, sticky
+prefix-affinity routing with unhealthy-replica fallback, and cluster
+summary aggregation.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.models import transformer
+from repro.serving import (DisaggConfig, EngineConfig, LLMEngine, Request,
+                           SamplingParams, State)
+from repro.serving.cluster import (DecodeEngine, DisaggCluster,
+                                   PrefillEngine, fnv1a_tokens,
+                                   prefix_route_key)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = registry.get_smoke_config("llama3-8b")
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _grouped_reqs(cfg, groups=3, per=3, prefix=8, suffix=6, new=6, seed=0):
+    """`groups` prefix families × `per` members each — the shared leading
+    blocks exercise prefix sharing locally and affinity routing globally."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for _ in range(groups):
+        common = rng.integers(0, cfg.vocab_size, size=prefix).tolist()
+        for _ in range(per):
+            reqs.append(Request(
+                prompt=common +
+                rng.integers(0, cfg.vocab_size, size=suffix).tolist(),
+                params=SamplingParams(max_new_tokens=new)))
+    return reqs
+
+
+def _econf(partition="head", **kw):
+    base = dict(placement="attention_pool", partition=partition,
+                attention_workers=2, num_blocks=64, block_size=4,
+                max_batch=4, prefix_sharing=True, prefill_chunk_tokens=8)
+    if partition != "block":
+        base["kv_shards"] = 2
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+# ======================================================================
+# tentpole: the parity matrix — bit-exact through the handoff
+# ======================================================================
+@pytest.mark.parametrize("partition", ["head", "request", "block"])
+def test_handoff_bit_parity(setup, partition):
+    """Single engine vs 1-replica cluster (same config, prefix sharing +
+    chunked prefill on, transfer stretched to 2 blocks/step): greedy
+    outputs bit-identical across every pool partition."""
+    cfg, params = setup
+    econf = _econf(partition)
+    ref = _grouped_reqs(cfg)
+    eng = LLMEngine(cfg, params, econf)
+    eng.submit(ref)
+    eng.run()
+
+    reqs = _grouped_reqs(cfg)
+    cluster = DisaggCluster(cfg, params, econf, replicas=1,
+                            disagg=DisaggConfig(transfer_blocks_per_step=2))
+    cluster.submit(reqs)
+    cluster.run()
+    assert cluster.finished
+    assert [r.output for r in reqs] == [r.output for r in ref]
+    summary = cluster.summary()
+    assert summary["handoffs_completed"] == len(reqs)
+    assert summary["kv_bytes_transferred"] > 0
+
+
+def test_decode_engine_never_prefills(setup):
+    """Every request joins the decode batch PREBUILT: the decode engine
+    runs no prefill forward (no slab, no admit/chunk events) — only
+    handoff admissions."""
+    cfg, params = setup
+    cluster = DisaggCluster(cfg, params, _econf(), replicas=1,
+                            disagg=DisaggConfig(transfer_blocks_per_step=2))
+    reqs = cluster.submit(_grouped_reqs(cfg))
+    cluster.run()
+    dec = cluster.registry[0].decode
+    assert dec.stats.max_prefill_slab_tokens == 0
+    kinds = {e.kind for e in dec.event_log}
+    assert "admit" not in kinds and "chunk" not in kinds
+    admits = [e for e in dec.event_log if e.kind == "handoff_admit"]
+    assert {e.rid for e in admits} == {r.rid for r in reqs}
+    assert dec.stats.tokens_generated > 0
+
+
+def test_handoff_lifecycle_event_order(setup):
+    """Per request, the decode engine's lifecycle events run strictly
+    handoff_recv → prealloc → transfer_done → handoff_admit."""
+    cfg, params = setup
+    cluster = DisaggCluster(cfg, params, _econf(), replicas=1,
+                            disagg=DisaggConfig(transfer_blocks_per_step=1))
+    reqs = cluster.submit(_grouped_reqs(cfg, groups=2, per=2))
+    cluster.run()
+    dec = cluster.registry[0].decode
+    for r in reqs:
+        stages = [e.kind for e in dec.event_log if e.rid == r.rid
+                  and e.kind in ("handoff_recv", "prealloc",
+                                 "transfer_done", "handoff_admit")]
+        assert stages == ["handoff_recv", "prealloc", "transfer_done",
+                          "handoff_admit"], (r.rid, stages)
+    # 1 block/step: multi-block payloads take >1 step to land
+    done = [e for e in dec.event_log if e.kind == "transfer_done"]
+    assert any(e.info["steps"] >= e.info["blocks"] - 1 for e in done)
+
+
+def test_retained_prefixes_skip_follower_prefill(setup):
+    """With retention on, the prefill engine keeps exported prompts as
+    donors: same-prefix followers skip their shared leading blocks."""
+    cfg, params = setup
+    cluster = DisaggCluster(cfg, params, _econf(), replicas=1)
+    cluster.submit(_grouped_reqs(cfg, groups=2, per=4))
+    cluster.run()
+    pre = cluster.registry[0].prefill
+    assert pre.stats.prefill_tokens_skipped > 0
+    assert pre.stats.blocks_shared > 0
+    # retention off: same workload shares nothing across handoffs
+    cold = DisaggCluster(cfg, params, _econf(), replicas=1,
+                         disagg=DisaggConfig(retain_prefixes=False))
+    cold.submit(_grouped_reqs(cfg, groups=2, per=4))
+    cold.run()
+    assert cold.registry[0].prefill.retained_rids == []
+
+
+# ======================================================================
+# routing
+# ======================================================================
+def test_affinity_routing_concentrates_prefix_groups(setup):
+    """Every member of a prefix family routes to ONE replica (sticky
+    memo); followers count as affinity hits and skip shared prefill."""
+    cfg, params = setup
+    groups, per = 3, 4
+    cluster = DisaggCluster(cfg, params, _econf(), replicas=2,
+                            routing="affinity")
+    reqs = cluster.submit(_grouped_reqs(cfg, groups=groups, per=per))
+    cluster.run()
+    for g in range(groups):
+        fam = reqs[g * per:(g + 1) * per]
+        homes = {cluster.replica_of(r.rid) for r in fam}
+        assert len(homes) == 1, f"group {g} split across {homes}"
+    s = cluster.summary()
+    assert s["router_affinity_hits"] == groups * (per - 1)
+    assert s["prefill_tokens_skipped"] > 0
+    assert len(cluster.router.assignments) == groups
+
+
+def test_router_prefers_least_loaded_for_short_prompts(setup):
+    """A prompt with no full leading block has nothing to be affine
+    about — it routes least-loaded and leaves no sticky assignment."""
+    cfg, params = setup
+    cluster = DisaggCluster(cfg, params, _econf(), replicas=2)
+    short = Request(prompt=[1, 2, 3],          # < block_size=4
+                    params=SamplingParams(max_new_tokens=2))
+    assert prefix_route_key(short.prompt, 4, 2) is None
+    cluster.submit(short)
+    assert cluster.router.assignments == {}
+    cluster.run()
+    assert short.state == State.FINISHED
+
+
+def test_unhealthy_replica_diverts_without_losing_affinity(setup):
+    """A quarantined shard on the affinity target diverts new arrivals to
+    the least-loaded healthy replica WITHOUT overwriting the sticky memo;
+    the stream snaps back (and counts a hit) after the shard rejoins."""
+    cfg, params = setup
+    cluster = DisaggCluster(cfg, params, _econf(), replicas=2)
+    prompt = list(np.random.default_rng(5).integers(
+        0, cfg.vocab_size, size=12))
+    r1 = cluster.submit(Request(prompt=prompt,
+                                params=SamplingParams(max_new_tokens=2)))[0]
+    home = cluster.replica_of(r1.rid)
+    key = prefix_route_key(prompt, 4, 2)
+    assert cluster.router.assignments[key] == home
+
+    cluster.registry[home].decode.kv.quarantine_shard(0)
+    assert not cluster.registry[home].healthy
+    r2 = cluster.submit(Request(prompt=list(prompt),
+                                params=SamplingParams(max_new_tokens=2)))[0]
+    assert cluster.replica_of(r2.rid) != home
+    assert cluster.router.assignments[key] == home   # memo untouched
+    hits_before = cluster.registry[home].prefill.stats.router_affinity_hits
+
+    cluster.registry[home].decode.kv.rejoin_shard(0)
+    r3 = cluster.submit(Request(prompt=list(prompt),
+                                params=SamplingParams(max_new_tokens=2)))[0]
+    assert cluster.replica_of(r3.rid) == home        # snapped back
+    assert cluster.registry[home].prefill.stats.router_affinity_hits == \
+        hits_before + 1
+
+
+def test_random_routing_is_seeded(setup):
+    cfg, params = setup
+    def routes(seed):
+        c = DisaggCluster(cfg, params, _econf(), replicas=2,
+                          routing="random", seed=seed)
+        rs = c.submit(_grouped_reqs(cfg, groups=2, per=3, new=1))
+        return [c.replica_of(r.rid) for r in rs]
+    assert routes(3) == routes(3)           # deterministic per seed
+    assert set(routes(3) + routes(4)) == {0, 1}
+
+
+def test_cluster_validates_construction(setup):
+    cfg, params = setup
+    with pytest.raises(ValueError, match="replicas"):
+        DisaggCluster(cfg, params, _econf(), replicas=0)
+    with pytest.raises(ValueError, match="routing policy"):
+        DisaggCluster(cfg, params, _econf(), routing="round_robin")
+
+
+def test_fnv1a_is_stable_and_content_keyed():
+    """The routing hash must be process-stable (unlike salted hash()) and
+    keyed on token content."""
+    toks = (17, 4096, -1, 0)
+    assert fnv1a_tokens(toks) == fnv1a_tokens(list(toks))
+    assert fnv1a_tokens(toks) != fnv1a_tokens(toks[:-1])
+    assert fnv1a_tokens(()) == 0xcbf29ce484222325   # FNV-1a offset basis
+    # key = leading FULL blocks only, capped at affinity_blocks
+    assert prefix_route_key(list(range(10)), 4, 2) == tuple(range(8))
+    assert prefix_route_key(list(range(10)), 4, 1) == tuple(range(4))
+    assert prefix_route_key(list(range(5)), 4, 2) == tuple(range(4))
+
+
+# ======================================================================
+# standalone engines (no cluster): the poll-style transport
+# ======================================================================
+def test_standalone_engines_with_polled_outbox(setup):
+    """Without an on_handoff sink the prefill engine parks exports in its
+    outbox; a caller relays them — the RPC-less transport seam."""
+    cfg, params = setup
+    econf = _econf()
+    prefill = PrefillEngine(cfg, params, econf)
+    decode = DecodeEngine(cfg, params, econf)
+    reqs = _grouped_reqs(cfg, groups=1, per=2)
+    prefill.submit(reqs)
+    while prefill.has_work():
+        prefill.step()
+        for h in prefill.collect_handoffs():
+            decode.enqueue_handoff(h.request, h.payload)
+    while decode.has_work():
+        decode.step()
+    assert all(r.state == State.FINISHED for r in reqs)
+    assert all(len(r.output) == 6 for r in reqs)
+    assert decode.stats.handoffs_completed == 2
+    # byte accounting agrees across the seam
+    assert decode.stats.kv_bytes_transferred == \
+        prefill.stats.kv_bytes_transferred
+
+
+def test_cluster_summary_shape(setup):
+    cfg, params = setup
+    cluster = DisaggCluster(cfg, params, _econf(), replicas=2)
+    cluster.submit(_grouped_reqs(cfg, groups=2, per=2, new=3))
+    cluster.run()
+    s = cluster.summary()
+    for key in ("replicas", "routing", "requests", "kv_bytes_transferred",
+                "handoffs_completed", "handoff_retries",
+                "router_affinity_hits", "prefill_tokens_skipped",
+                "blocks_shared", "tokens_generated", "per_replica",
+                "handoff_p50_s", "handoff_p90_s", "handoff_p99_s"):
+        assert key in s, key
+    assert s["replicas"] == 2 and s["routing"] == "affinity"
+    assert s["handoffs_completed"] == 4
+    # each request's FIRST token is sampled prefill-side at handoff time;
+    # the decode tier generates the remaining new-1
+    assert s["tokens_generated"] == 4 * (3 - 1)
+    assert len(s["per_replica"]) == 2
+    assert sum(p["handoffs_completed"] for p in s["per_replica"]) == 4

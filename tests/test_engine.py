@@ -1,5 +1,8 @@
-"""Serving engines: baseline vs Lamina parity, continuous batching, transfer
-accounting vs the paper's §3.1 formula, head vs request load balance."""
+"""Worker-pool and cross-placement serving invariants: homogeneous vs
+attention-pool greedy parity, continuous batching under a tight pool,
+transfer accounting vs the paper's §3.1 formula, head vs request load
+balance. (The legacy oracle engines these tests once exercised are gone —
+``LLMEngine`` cross-config checks are the parity surface now.)"""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -8,10 +11,10 @@ import pytest
 from repro.configs import registry
 from repro.data import traces
 from repro.models import transformer
-from repro.serving.disagg_engine import (AttentionWorkerPool, DisaggEngine,
-                                         expected_transfer_bytes)
-from repro.serving.engine import Engine
+from repro.serving import EngineConfig, LLMEngine
 from repro.serving.request import Request, SamplingParams
+from repro.serving.worker_pool import (AttentionWorkerPool,
+                                       expected_transfer_bytes)
 
 
 @pytest.fixture(scope="module")
@@ -27,34 +30,30 @@ def _reqs(cfg, lens=(5, 12, 9, 20), new=8):
                     params=SamplingParams(max_new_tokens=new)) for n in lens]
 
 
-def test_engines_identical_outputs(setup):
+def _run(cfg, params, **conf):
+    reqs = _reqs(cfg)
+    eng = LLMEngine(cfg, params, EngineConfig(max_batch=4, num_blocks=64,
+                                              **conf))
+    eng.submit(reqs)
+    eng.run()
+    return [r.output for r in reqs], eng
+
+
+def test_placements_identical_outputs(setup):
     cfg, params = setup
-    r1 = _reqs(cfg)
-    e1 = Engine(cfg, params, max_batch=4, num_blocks=64)
-    e1.submit(r1)
-    e1.run()
-    r2 = _reqs(cfg)
-    e2 = DisaggEngine(cfg, params, n_attention_workers=2, max_batch=4,
-                      num_blocks=64)
-    e2.submit(r2)
-    e2.run()
-    r3 = _reqs(cfg)
-    e3 = DisaggEngine(cfg, params, n_attention_workers=4,
-                      partition="request", max_batch=4, num_blocks=64)
-    e3.submit(r3)
-    e3.run()
-    for a, b, c in zip(r1, r2, r3):
-        assert a.output == b.output == c.output
-        assert len(a.output) == a.params.max_new_tokens
+    ref, _ = _run(cfg, params, placement="homogeneous")
+    head, _ = _run(cfg, params, placement="attention_pool",
+                   partition="head", attention_workers=2)
+    req, _ = _run(cfg, params, placement="attention_pool",
+                  partition="request", attention_workers=4)
+    assert ref == head == req
+    assert all(len(o) == 8 for o in ref)
 
 
 def test_transfer_bytes_match_paper_formula(setup):
     cfg, params = setup
-    reqs = _reqs(cfg)
-    eng = DisaggEngine(cfg, params, n_attention_workers=2, max_batch=4,
-                       num_blocks=64)
-    eng.submit(reqs)
-    eng.run()
+    _, eng = _run(cfg, params, placement="attention_pool",
+                  partition="head", attention_workers=2)
     per_token = eng.pool.log.total / eng.stats.tokens_generated
     assert per_token == pytest.approx(expected_transfer_bytes(cfg, 1))
     # and the formula itself is (2 + 2/G)·e·d·L for one token
@@ -67,7 +66,8 @@ def test_continuous_batching_admits_as_memory_frees(setup):
     cfg, params = setup
     # pool sized so only ~3 requests fit at once
     reqs = _reqs(cfg, lens=(20, 20, 20, 20, 20, 20), new=4)
-    eng = Engine(cfg, params, max_batch=8, num_blocks=12, block_size=8)
+    eng = LLMEngine(cfg, params, EngineConfig(max_batch=8, num_blocks=12,
+                                              block_size=8))
     eng.submit(reqs)
     eng.run()
     assert all(r.done() for r in reqs)
@@ -117,60 +117,17 @@ def test_trace_generation_stats():
                                   "kimi-ta"}
 
 
-def test_fault_tolerance_recovers_exactly(setup):
-    """Paper §5: attention-worker failure mid-decode -> KV rebuilt from
-    prompt + generated tokens; generation continues bit-identically."""
-    cfg, params = setup
-    ref = _reqs(cfg)
-    e_ref = DisaggEngine(cfg, params, max_batch=4, num_blocks=64)
-    e_ref.submit(ref)
-    e_ref.run()
-
-    reqs = _reqs(cfg)
-    eng = DisaggEngine(cfg, params, max_batch=4, num_blocks=64)
-    eng.submit(reqs)
-    for step in range(3):
-        eng.step()
-    eng.fail_attention_worker()   # lose ALL pooled KV
-    eng.fail_model_worker()       # and a model worker for good measure
-    eng.run()
-    for a, b in zip(ref, reqs):
-        assert a.output == b.output
-
-
-def test_overlap_engine_matches(setup):
-    cfg, params = setup
-    r1 = _reqs(cfg)
-    e1 = DisaggEngine(cfg, params, overlap=True, max_batch=4, num_blocks=64)
-    e1.submit(r1)
-    e1.run()
-    r2 = _reqs(cfg)
-    e2 = DisaggEngine(cfg, params, overlap=False, max_batch=4, num_blocks=64)
-    e2.submit(r2)
-    e2.run()
-    for a, b in zip(r1, r2):
-        assert a.output == b.output
-
-
-def test_block_partition_matches_baseline_engine(setup):
+def test_block_partition_matches_homogeneous(setup):
     """partition="block" (pool block axis sharded over workers, §4.2.2
-    partial merge) decodes bit-identically to the baseline and to the other
-    partitions."""
+    partial merge) decodes bit-identically to the fused baseline."""
     cfg, params = setup
-    r1 = _reqs(cfg)
-    e1 = Engine(cfg, params, max_batch=4, num_blocks=64)
-    e1.submit(r1)
-    e1.run()
-    r2 = _reqs(cfg)
-    e2 = DisaggEngine(cfg, params, n_attention_workers=4, partition="block",
-                      max_batch=4, num_blocks=64)
-    e2.submit(r2)
-    e2.run()
-    assert e2.kv.n_shards == 4  # engine wired the pool shards automatically
-    for a, b in zip(r1, r2):
-        assert a.output == b.output
+    ref, _ = _run(cfg, params, placement="homogeneous")
+    blk, eng = _run(cfg, params, placement="attention_pool",
+                    partition="block", attention_workers=4)
+    assert eng.kv.n_shards == 4  # engine wired the pool shards automatically
+    assert blk == ref
     # live-token accounting ran (data-dependent, host-side)
-    assert sum(e2.pool.per_worker_kv_bytes) > 0
+    assert sum(eng.pool.per_worker_kv_bytes) > 0
 
 
 @pytest.mark.slow
@@ -182,9 +139,10 @@ def test_block_partition_long_request_spans_all_shards(setup):
     rng = np.random.default_rng(3)
     req = Request(prompt=rng.integers(0, cfg.vocab_size, size=150).tolist(),
                   params=SamplingParams(max_new_tokens=4))
-    eng = DisaggEngine(cfg, params, n_attention_workers=4, partition="block",
-                       max_batch=4, num_blocks=64, block_size=8)
-    eng.submit(req if isinstance(req, list) else [req])
+    eng = LLMEngine(cfg, params, EngineConfig(
+        placement="attention_pool", partition="block", attention_workers=4,
+        max_batch=4, num_blocks=64, block_size=8))
+    eng.submit([req])
     eng.step()  # prefill + first decode iteration
     toks = eng.kv.shard_live_tokens([req.rid])
     assert (toks > 0).all()
@@ -234,5 +192,5 @@ def test_block_partition_pallas_backend_matches_jnp(setup):
 def test_block_partition_rejects_mismatched_kv_shards(setup):
     cfg, params = setup
     with pytest.raises(ValueError):
-        DisaggEngine(cfg, params, n_attention_workers=4, partition="block",
-                     kv_shards=2, num_blocks=64)
+        LLMEngine(cfg, params, placement="attention_pool", partition="block",
+                  attention_workers=4, kv_shards=2, num_blocks=64)

@@ -7,10 +7,9 @@ import pytest
 
 from repro.configs import registry
 from repro.models import transformer
-from repro.serving.engine import Engine
-from repro.serving.moe_offload import (MoEOffloadEngine, min_bandwidth_moe,
-                                       transfer_bytes_moe)
+from repro.serving import EngineConfig, LLMEngine
 from repro.serving.request import Request, SamplingParams
+from repro.serving.worker_pool import min_bandwidth_moe, transfer_bytes_moe
 
 
 # ---------------------------------------------------------------------------
@@ -98,12 +97,14 @@ def _reqs(cfg, lens=(5, 9), new=6):
 def test_moe_offload_engine_matches_baseline(moe_setup):
     cfg, params = moe_setup
     r1 = _reqs(cfg)
-    e1 = Engine(cfg, params, max_batch=2, num_blocks=64)
+    e1 = LLMEngine(cfg, params, EngineConfig(placement="homogeneous",
+                                             max_batch=2, num_blocks=64))
     e1.submit(r1)
     e1.run()
     r2 = _reqs(cfg)
-    e2 = MoEOffloadEngine(cfg, params, n_expert_workers=2,
-                          n_attention_workers=2, max_batch=2, num_blocks=64)
+    e2 = LLMEngine(cfg, params, EngineConfig(
+        placement="moe_offload", attention_workers=2, expert_workers=2,
+        max_batch=2, num_blocks=64))
     e2.submit(r2)
     e2.run()
     for a, b in zip(r1, r2):
@@ -129,7 +130,7 @@ def test_moe_offload_bandwidth_is_modest():
 
 def test_expert_pool_divisibility_guard(moe_setup):
     cfg, _ = moe_setup
-    from repro.serving.moe_offload import ExpertWorkerPool
+    from repro.serving.worker_pool import ExpertWorkerPool
     with pytest.raises(ValueError):
         ExpertWorkerPool(cfg, 3)  # 4 experts % 3 != 0
 

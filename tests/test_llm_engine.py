@@ -1,5 +1,6 @@
-"""Unified LLMEngine facade: greedy token-for-token parity against the
-pre-refactor engines for every placement, the streaming request lifecycle,
+"""Unified LLMEngine facade: greedy token-for-token parity across
+placements (every disaggregated placement must match the fused
+homogeneous baseline bit-for-bit), the streaming request lifecycle,
 preemption under pool pressure with recompute re-admission, per-request
 seeded sampling, and the scheduler/lifecycle edge cases."""
 import jax
@@ -9,13 +10,13 @@ import pytest
 
 from repro.configs import registry
 from repro.models import transformer
-from repro.serving import (EngineConfig, FCFSPolicy, LLMEngine,
+from repro.serving import (EngineConfig, EngineStats, FCFSPolicy, LLMEngine,
                            PoolExhausted, PreemptingPolicy, Request,
                            RequestScheduler, SamplingParams,
                            SchedulingStalled, State, make_policy)
-from repro.serving.disagg_engine import DisaggEngine
-from repro.serving.engine import Engine, EngineStats
 from repro.serving.kvcache import PagedKVCache
+from repro.serving.worker_pool import (expected_transfer_bytes,
+                                       transfer_bytes_moe)
 
 
 @pytest.fixture(scope="module")
@@ -33,55 +34,51 @@ def _reqs(cfg, lens=(5, 12, 9, 20), new=8, **sp):
 
 
 @pytest.fixture(scope="module")
-def legacy_ref(setup):
-    """The pre-refactor baseline engine's greedy outputs (parity oracle)."""
-    cfg, params = setup
-    reqs = _reqs(cfg)
-    eng = Engine(cfg, params, max_batch=4, num_blocks=64)
-    eng.submit(reqs)
-    eng.run()
-    return [r.output for r in reqs]
-
-
-# ======================================================================
-# tentpole: one engine, every placement — parity with the old engines
-# ======================================================================
-
-def test_homogeneous_matches_legacy_engine(setup, legacy_ref):
+def homogeneous_ref(setup):
+    """Fused homogeneous baseline's greedy outputs — the parity oracle
+    every disaggregated placement must reproduce bit-for-bit."""
     cfg, params = setup
     reqs = _reqs(cfg)
     eng = LLMEngine(cfg, params, EngineConfig(placement="homogeneous",
                                               max_batch=4, num_blocks=64))
     eng.submit(reqs)
     eng.run()
-    assert [r.output for r in reqs] == legacy_ref
+    return [r.output for r in reqs]
+
+
+# ======================================================================
+# tentpole: one engine, every placement — cross-config greedy parity
+# ======================================================================
+
+def test_homogeneous_outputs_deterministic(setup, homogeneous_ref):
+    cfg, params = setup
+    reqs = _reqs(cfg)
+    eng = LLMEngine(cfg, params, EngineConfig(placement="homogeneous",
+                                              max_batch=4, num_blocks=64))
+    eng.submit(reqs)
+    eng.run()
+    assert [r.output for r in reqs] == homogeneous_ref
     assert all(len(r.output) == r.params.max_new_tokens for r in reqs)
 
 
-def test_attention_pool_head_matches_legacy_disagg(setup, legacy_ref):
+def test_attention_pool_head_matches_homogeneous(setup, homogeneous_ref):
     cfg, params = setup
-    r_old = _reqs(cfg)
-    old = DisaggEngine(cfg, params, n_attention_workers=2, max_batch=4,
-                       num_blocks=64)
-    old.submit(r_old)
-    old.run()
-    r_new = _reqs(cfg)
-    new = LLMEngine(cfg, params, EngineConfig(
+    reqs = _reqs(cfg)
+    eng = LLMEngine(cfg, params, EngineConfig(
         placement="attention_pool", partition="head", attention_workers=2,
         max_batch=4, num_blocks=64))
-    new.submit(r_new)
-    new.run()
-    assert [r.output for r in r_new] == [r.output for r in r_old]
-    assert [r.output for r in r_new] == legacy_ref
-    # transfer accounting survived the refactor: same analytic per-token
-    # bytes as the legacy engine logged
-    assert new.pool.log.total == old.pool.log.total
-    assert new.pool.log.transfers == old.pool.log.transfers
+    eng.submit(reqs)
+    eng.run()
+    assert [r.output for r in reqs] == homogeneous_ref
+    # the pool's analytic per-token wire accounting matches the paper's
+    # §3.1 formula exactly (the same invariant the legacy engine carried)
+    per_token = eng.pool.log.total / eng.stats.tokens_generated
+    assert per_token == pytest.approx(expected_transfer_bytes(cfg, 1))
 
 
 @pytest.mark.parametrize("partition,workers", [("request", 4), ("block", 4)])
-def test_attention_pool_partitions_match_legacy(setup, legacy_ref,
-                                                partition, workers):
+def test_attention_pool_partitions_match_homogeneous(setup, homogeneous_ref,
+                                                     partition, workers):
     cfg, params = setup
     reqs = _reqs(cfg)
     eng = LLMEngine(cfg, params, EngineConfig(
@@ -89,17 +86,16 @@ def test_attention_pool_partitions_match_legacy(setup, legacy_ref,
         attention_workers=workers, max_batch=4, num_blocks=64))
     eng.submit(reqs)
     eng.run()
-    assert [r.output for r in reqs] == legacy_ref
+    assert [r.output for r in reqs] == homogeneous_ref
     if partition == "block":
         assert eng.kv.n_shards == workers   # facade wired the pool shards
     # data-dependent per-worker KV accounting ran host-side
     assert sum(eng.pool.per_worker_kv_bytes) > 0
 
 
-def test_moe_offload_matches_legacy_engine(setup):
-    from repro.serving.moe_offload import MoEOffloadEngine
+def test_moe_offload_matches_homogeneous(setup):
     cfg = registry.get_smoke_config("qwen3-moe-30b-a3b").replace(
-        capacity_factor=64.0)  # no drops -> bit-stable across engines
+        capacity_factor=64.0)  # no drops -> bit-stable across placements
     params = transformer.init_params(jax.random.PRNGKey(0), cfg)
 
     def reqs():
@@ -109,28 +105,30 @@ def test_moe_offload_matches_legacy_engine(setup):
                         params=SamplingParams(max_new_tokens=6))
                 for n in (5, 9)]
 
-    r_old = reqs()
-    old = MoEOffloadEngine(cfg, params, n_expert_workers=2,
-                           n_attention_workers=2, max_batch=2, num_blocks=64)
-    old.submit(r_old)
-    old.run()
+    r_ref = reqs()
+    ref = LLMEngine(cfg, params, EngineConfig(
+        placement="homogeneous", max_batch=2, num_blocks=64))
+    ref.submit(r_ref)
+    ref.run()
     r_new = reqs()
     new = LLMEngine(cfg, params, EngineConfig(
         placement="moe_offload", attention_workers=2, expert_workers=2,
         max_batch=2, num_blocks=64))
     new.submit(r_new)
     new.run()
-    assert [r.output for r in r_new] == [r.output for r in r_old]
-    # both pools accounted transfers through the placement strategy
-    assert new.pool.log.transfers == old.pool.log.transfers
-    assert new.expert_pool.log.total == old.expert_pool.log.total
+    assert [r.output for r in r_new] == [r.output for r in r_ref]
+    # both pools accounted transfers through the placement strategy, and
+    # the expert boundary's per-token bytes match the analytic formula
+    assert new.pool.log.transfers > 0
+    per_tok = new.expert_pool.log.total / new.stats.tokens_generated
+    assert per_tok == pytest.approx(transfer_bytes_moe(cfg, 1))
 
 
-def test_attention_pool_matches_legacy_on_windowed_softcap_model(setup):
+def test_attention_pool_matches_homogeneous_on_windowed_softcap_model(setup):
     """gemma2 drives every exotic branch of the sliced decode step —
     alternating local/global sliding windows, attention sinks, logit
     softcap, sandwich post-norms, tied embeddings — through the placement
-    strategy; parity with the fused legacy engine must survive them all."""
+    strategy; parity with the fused baseline must survive them all."""
     cfg = registry.get_smoke_config("gemma2-27b")
     params = transformer.init_params(jax.random.PRNGKey(0), cfg)
 
@@ -143,16 +141,17 @@ def test_attention_pool_matches_legacy_on_windowed_softcap_model(setup):
                         params=SamplingParams(max_new_tokens=8))
                 for n in (70, 9)]
 
-    r_old = reqs()
-    old = Engine(cfg, params, max_batch=2, num_blocks=64)
-    old.submit(r_old)
-    old.run()
+    r_ref = reqs()
+    ref = LLMEngine(cfg, params, EngineConfig(
+        placement="homogeneous", max_batch=2, num_blocks=64))
+    ref.submit(r_ref)
+    ref.run()
     r_new = reqs()
     new = LLMEngine(cfg, params, EngineConfig(
         placement="attention_pool", max_batch=2, num_blocks=64))
     new.submit(r_new)
     new.run()
-    assert [r.output for r in r_new] == [r.output for r in r_old]
+    assert [r.output for r in r_new] == [r.output for r in r_ref]
 
 
 def test_moe_offload_rejects_dense_config(setup):
@@ -504,11 +503,24 @@ def test_engine_stats_percentiles_and_summary():
     s = stats.summary()
     assert {"throughput_tok_s", "mean_batch", "preemptions", "requests",
             "ttft_p50_s", "ttft_p90_s", "ttft_p99_s",
-            "tbt_p50_s", "tbt_p90_s", "tbt_p99_s"} <= set(s)
+            "tbt_p50_s", "tbt_p90_s", "tbt_p99_s",
+            "kv_bytes_transferred", "handoffs_completed", "handoff_retries",
+            "router_affinity_hits", "handoff_p50_s", "handoff_p90_s",
+            "handoff_p99_s"} <= set(s)
     assert s["requests"] == 3
+    # the handoff/transfer surface (disaggregated cluster) aggregates
+    stats.kv_bytes_transferred += 1024
+    stats.handoff_latencies.extend([0.1, 0.3])
+    stats.router_affinity_hits += 2
+    s2 = stats.summary()
+    assert s2["kv_bytes_transferred"] == 1024
+    assert s2["handoffs_completed"] == 2
+    assert s2["router_affinity_hits"] == 2
+    assert s2["handoff_p50_s"] == pytest.approx(0.2)
     # empty stats stay well-defined (no NaNs in dashboards)
     empty = EngineStats().summary()
     assert empty["ttft_p99_s"] == 0.0 and empty["throughput_tok_s"] == 0.0
+    assert empty["handoff_p99_s"] == 0.0
 
 
 def test_llm_engine_populates_latency_percentiles(setup):

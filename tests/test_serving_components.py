@@ -9,7 +9,7 @@ from repro.configs import registry
 from repro.serving.kvcache import PagedKVCache
 from repro.serving.request import Request, SamplingParams, State
 from repro.serving.sampler import sample
-from repro.serving.scheduler import Scheduler
+from repro.serving.scheduler import RequestScheduler
 
 
 def test_greedy_sampling_is_argmax():
@@ -45,7 +45,7 @@ def test_top_k_restricts_support():
 def test_scheduler_never_overcommits(prompts, max_batch, blocks):
     cfg = registry.get_smoke_config("llama3-8b")
     kv = PagedKVCache(cfg, num_blocks=blocks, block_size=8)
-    sched = Scheduler(kv, max_batch=max_batch)
+    sched = RequestScheduler(kv, max_batch=max_batch)
     reqs = [Request(prompt=list(range(n)),
                     params=SamplingParams(max_new_tokens=1))
             for n in prompts]
