@@ -105,7 +105,51 @@ def run(quick: bool = False):
             f"warm TTFT p50 under affinity routing must beat random: "
             f"{ttft_aff:.4f}s >= {ttft_rand:.4f}s")
 
-    rows = []
+    # int8 quantized KV pool through the same cluster: scales ride the
+    # handoff payloads with their blocks, so the wire bytes per handed-off
+    # block drop to (hd+4)/(hd·e) of bf16 — asserted against the bf16
+    # affinity run (identical workload => identical blocks transferred).
+    econf8 = econf.replace(kv_dtype="int8")
+    ref8 = _grouped(cfg, **workload)
+    eng8 = LLMEngine(cfg, params, econf8)
+    eng8.submit(ref8)
+    eng8.run()
+    cluster = DisaggCluster(cfg, params, econf8, replicas=K,
+                            routing="affinity",
+                            disagg=DisaggConfig(transfer_blocks_per_step=4))
+    cluster.submit(_grouped(cfg, **workload))
+    cluster.run()
+    for r in cluster.registry:
+        r.prefill.stats = EngineStats()
+        r.decode.stats = EngineStats()
+    measured8 = cluster.submit(_grouped(cfg, **workload))
+    cluster.run()
+    if [r.output for r in measured8] != [r.output for r in ref8]:
+        raise AssertionError(
+            "int8 cluster outputs diverged from the int8 single-engine "
+            "reference — the quantized handoff must be exact (scales ride "
+            "with their blocks)")
+    s8, ttft8 = cluster.summary(), _warm_ttft_p50(cluster)
+    s_aff_bytes = results["affinity"][0]["kv_bytes_transferred"]
+    wire_ratio = s8["kv_bytes_transferred"] / max(s_aff_bytes, 1)
+    if wire_ratio > 0.55:
+        raise AssertionError(
+            f"int8 handoff must at least ~halve kv_bytes_transferred: "
+            f"ratio={wire_ratio:.3f} ({s8['kv_bytes_transferred']} vs "
+            f"{s_aff_bytes} bf16)")
+
+    rows = [{
+        "name": f"disagg_cluster_K{K}_int8kv",
+        "us_per_call": round(ttft8 * 1e6),
+        "derived": (
+            f"replicas={K};warm_ttft_p50_ms={ttft8 * 1e3:.1f};"
+            f"handoffs_completed={s8['handoffs_completed']};"
+            f"kv_bytes_transferred={s8['kv_bytes_transferred']};"
+            f"bf16_kv_bytes_transferred={s_aff_bytes};"
+            f"wire_ratio={wire_ratio:.3f};"
+            f"prefill_tokens_skipped={s8['prefill_tokens_skipped']};"
+            f"outputs_identical=True"),
+    }]
     for policy, (s, ttft) in results.items():
         rows.append({
             "name": f"disagg_cluster_K{K}_{policy}",

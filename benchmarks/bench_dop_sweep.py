@@ -45,4 +45,20 @@ def run():
             })
         rows.append({"name": f"fig11_{m}_best", "us_per_call": 0,
                      "derived": f"best={best[0]};tok_per_dollar={best[1]:.0f}"})
+        # int8 quantized KV pool (§7 / kv_dtype="int8"): ~half the
+        # per-token KV bytes -> ~2× the admitted batch at the same pool,
+        # and ~half the per-iteration attention reads
+        dop = (2, 4)
+        f = cm.kv_quant_factor(cfg)
+        base = cm.estimate_lamina(cfg, 4096, h100, h20, dop)
+        est = cm.estimate_lamina(cfg, 4096, h100, h20, dop, kv_byte_factor=f)
+        rows.append({
+            "name": f"fig11_{m}_lamina_{dop[0]}x{dop[1]}_int8kv",
+            "us_per_call": round(est.tbt_s * 1e6),
+            "derived": (f"tok_s={est.throughput_tok_s:.0f};"
+                        f"kv_byte_factor={f:.3f};"
+                        f"B={est.batch};B_bf16={base.batch};"
+                        f"batch_gain={est.batch/max(base.batch,1):.2f}x;"
+                        f"tok_per_dollar={est.tok_per_dollar:.0f}"),
+        })
     return rows

@@ -34,9 +34,11 @@ def _dense_gather_step(kv, ids, pad, q):
 
 def _paged_step(kv, ids, q):
     tables, lens = kv.block_table_batch(ids)
+    skw = {} if kv.k_scale is None else dict(k_scale=kv.k_scale[0],
+                                             v_scale=kv.v_scale[0])
     return paged_decode_attention_partial_jnp(
         q, kv.k_pool[0], kv.v_pool[0], jnp.asarray(tables),
-        jnp.asarray(lens)).a
+        jnp.asarray(lens), **skw).a
 
 
 def run(quick: bool = False):
@@ -79,4 +81,36 @@ def run(quick: bool = False):
                         f"dense_step_kv_mib={dense_bytes/2**20:.2f};"
                         f"paged_step_kv_mib={paged_bytes/2**20:.2f};"
                         f"bytes_reduction={ratio:.1f}x")})
+
+        # int8 quantized pool over the same paged walk: the kernel streams
+        # 1-byte values + one fp32 scale per token-head and dequantizes in
+        # the score/PV products — per-step bytes drop to (hd+4)/(hd·E) of
+        # the bf16 paged path (asserted ≥ ~2×)
+        kv8 = PagedKVCache(cfg, num_blocks=B * (S // bs) + 8, block_size=bs,
+                           kv_dtype="int8")
+        rng8 = np.random.default_rng(0)
+        for sid, n in enumerate(lens):
+            kv8.allocate(sid, n)
+            kv8.write_prefill(
+                sid,
+                jnp.asarray(rng8.standard_normal((L, Hkv, n, hd)),
+                            cfg.dtype),
+                jnp.asarray(rng8.standard_normal((L, Hkv, n, hd)),
+                            cfg.dtype))
+        t_int8 = time_call(lambda: _paged_step(kv8, ids, q))
+        alloc = sum(-(-n // bs) * bs for n in lens)
+        int8_bytes = 2 * L * alloc * Hkv * (hd + 4) + \
+            2 * L * B * Hkv * (hd + 4)
+        q_ratio = paged_bytes / int8_bytes
+        if q_ratio < 1.8:
+            raise AssertionError(
+                f"int8 pool must cut per-step paged KV bytes ~2×: got "
+                f"{q_ratio:.2f}x ({int8_bytes} vs {paged_bytes})")
+        rows.append({
+            "name": f"paged_attn_int8_B{B}_S{S}",
+            "us_per_call": round(t_int8 * 1e6, 1),
+            "derived": (f"bf16_paged_us={t_paged*1e6:.0f};"
+                        f"int8_step_kv_mib={int8_bytes/2**20:.2f};"
+                        f"paged_step_kv_mib={paged_bytes/2**20:.2f};"
+                        f"int8_reduction={q_ratio:.2f}x")})
     return rows

@@ -2,7 +2,8 @@
 ``benchmarks.run --json-dir`` writes): flag per-row timing regressions.
 
   PYTHONPATH=src python -m benchmarks.diff BASELINE_DIR CURRENT_DIR \
-      [--threshold 0.15] [--fail-on-regression] [--only fig10]
+      [--threshold 0.15] [--fail-on-regression] [--only fig10] \
+      [--require fig10_measured_int8kv_azure-conv ...]
 
 Rows are matched (label, name); a row whose ``us_per_call`` grew by more
 than ``--threshold`` (default 15%) over the baseline is a REGRESSION,
@@ -11,9 +12,16 @@ Rows with a zero/absent baseline timing (derived-only measurements) are
 compared for presence only. Added and removed rows/labels are reported
 informationally — coverage changes are a review surface, not a failure.
 
+``--require NAME`` (repeatable) asserts that a row named NAME exists in
+the CURRENT snapshots — exit 1 when any required row is missing,
+regardless of ``--fail-on-regression``. CI uses it to pin
+coverage-critical rows (e.g. the int8 KV-pool measurements) so a
+benchmark silently dropping them cannot pass as "0 regressions".
+
 Exit status: 0, or 1 with ``--fail-on-regression`` when any regression
 was flagged (CI wires this against the committed ``benchmarks/baseline``
-snapshots, non-blocking — runner timing variance is real).
+snapshots, non-blocking — runner timing variance is real) or when a
+``--require`` row is absent (always blocking).
 """
 from __future__ import annotations
 
@@ -85,12 +93,19 @@ def main(argv=None) -> int:
                     help="exit 1 when any regression is flagged")
     ap.add_argument("--only", default="",
                     help="restrict to labels containing this substring")
+    ap.add_argument("--require", action="append", default=[],
+                    metavar="NAME",
+                    help="row name that MUST exist in the current "
+                         "snapshots (repeatable); exit 1 if missing")
     args = ap.parse_args(argv)
 
     base = load_snapshots(args.baseline)
     cur = load_snapshots(args.current)
     regressions, improvements, added, removed = diff_rows(
         base, cur, args.threshold, args.only)
+
+    present = {name for doc in cur.values() for name in _rows(doc)}
+    missing = [name for name in args.require if name not in present]
 
     print("status,label,name,base_us,cur_us,delta")
     for tag, entries in (("REGRESSION", regressions),
@@ -101,9 +116,14 @@ def main(argv=None) -> int:
         print(f"added,{label},{name},,,")
     for label, name in removed:
         print(f"removed,{label},{name},,,")
+    for name in missing:
+        print(f"MISSING_REQUIRED,,{name},,,")
     print(f"# {len(regressions)} regression(s) over "
           f"{args.threshold:.0%}, {len(improvements)} improvement(s), "
-          f"{len(added)} added, {len(removed)} removed", file=sys.stderr)
+          f"{len(added)} added, {len(removed)} removed, "
+          f"{len(missing)} required row(s) missing", file=sys.stderr)
+    if missing:
+        return 1
     if regressions and args.fail_on_regression:
         return 1
     return 0

@@ -159,12 +159,15 @@ def head_parallel_decode_attention(mesh: Mesh, axis: str, q, k_cache, v_cache,
 # ---------------------------------------------------------------------------
 def _paged_shard_attend(q, kp, vp, bt, clen, *, sliding_window: int,
                         attention_sinks: int, logit_softcap: float,
-                        backend: str, interpret: bool):
+                        backend: str, interpret: bool,
+                        k_scale=None, v_scale=None):
     """Finalized paged attention over one device's pool slice, in place.
 
     q: (B, H_local, hd); kp/vp: (Hkv_local, NB, bs, hd); bt: (B, nb);
     clen: (B,). 'pallas' runs the paged flash-decode kernel; 'jnp' its
-    head-major gather reference (the CPU data path)."""
+    head-major gather reference (the CPU data path). Int8 pool slices
+    carry their (Hkv_local, NB, bs) scale slices; dequant fuses in-shard
+    inside the backend (no dense dequantized slab per device either)."""
     from repro.kernels.paged_decode_attention import (paged_decode_attention,
                                                      paged_decode_attention_jnp)
 
@@ -173,8 +176,10 @@ def _paged_shard_attend(q, kp, vp, bt, clen, *, sliding_window: int,
     qg = q.reshape(B, Hkv, H // Hkv, hd)
     fn = paged_decode_attention_jnp if backend == "jnp" else functools.partial(
         paged_decode_attention, interpret=interpret)
+    skw = {} if k_scale is None else dict(k_scale=k_scale, v_scale=v_scale)
     out = fn(qg, kp, vp, bt, clen, sliding_window=sliding_window,
-             attention_sinks=attention_sinks, logit_softcap=logit_softcap)
+             attention_sinks=attention_sinks, logit_softcap=logit_softcap,
+             **skw)
     return out.reshape(B, H, hd).astype(q.dtype)
 
 
@@ -185,13 +190,15 @@ def head_parallel_paged_decode_attention(mesh: Mesh, axis: str, q, k_pool,
                                          logit_softcap: float = 0.0,
                                          batch_axis: Optional[str] = None,
                                          backend: str = "jnp",
-                                         interpret: bool = False):
+                                         interpret: bool = False,
+                                         k_scale=None, v_scale=None):
     """Head-level split over the paged pool: each device owns Hkv/n heads of
     every pool block (pool head axis sharded over `axis`); the block table
     and lengths are replicated scalars. Each device runs the paged kernel
     (or its jnp reference) over its head slice in place — no dense view, no
     combine (heads are independent). Requires Hkv % mesh.shape[axis] == 0
-    (paper §5)."""
+    (paper §5). Int8 pools: the (Hkv, NB, bs) scale pools shard with the
+    same head axis as the value pools (scales-follow-blocks)."""
     Hkv = k_pool.shape[0]
     n = mesh.shape[axis]
     if Hkv % n:
@@ -204,15 +211,20 @@ def head_parallel_paged_decode_attention(mesh: Mesh, axis: str, q, k_pool,
               logit_softcap=logit_softcap, backend=backend,
               interpret=interpret)
 
-    def shard_fn(q, kp, vp, bt, clen):
-        return _paged_shard_attend(q, kp, vp, bt, clen, **kw)
+    def shard_fn(q, kp, vp, bt, clen, *scales):
+        skw = dict(zip(("k_scale", "v_scale"), scales))
+        return _paged_shard_attend(q, kp, vp, bt, clen, **kw, **skw)
 
+    operands = [q, k_pool, v_pool, block_tables, cache_len]
+    in_specs = [P(batch_axis, axis, None), P(axis, None, None, None),
+                P(axis, None, None, None), btspec, bspec]
+    if k_scale is not None:
+        operands += [k_scale, v_scale]
+        in_specs += [P(axis, None, None)] * 2
     return _shard_map_norep(
-        shard_fn, mesh=mesh,
-        in_specs=(P(batch_axis, axis, None), P(axis, None, None, None),
-                  P(axis, None, None, None), btspec, bspec),
+        shard_fn, mesh=mesh, in_specs=tuple(in_specs),
         out_specs=P(batch_axis, axis, None),
-    )(q, k_pool, v_pool, block_tables, cache_len)
+    )(*operands)
 
 
 def request_parallel_paged_decode_attention(mesh: Mesh, axis: str, q, k_pool,
@@ -221,24 +233,31 @@ def request_parallel_paged_decode_attention(mesh: Mesh, axis: str, q, k_pool,
                                             attention_sinks: int = 0,
                                             logit_softcap: float = 0.0,
                                             backend: str = "jnp",
-                                            interpret: bool = False):
+                                            interpret: bool = False,
+                                            k_scale=None, v_scale=None):
     """Request-level split over the paged pool: the batch (q, block table,
     lengths) is sharded; the pool is replicated — each device walks only its
     requests' tables through the paged kernel (or its jnp reference), in
-    place (the paper's load-imbalance baseline, pool-native)."""
+    place (the paper's load-imbalance baseline, pool-native). Int8 pools:
+    the scale pools replicate exactly like the value pools they describe."""
     kw = dict(sliding_window=sliding_window, attention_sinks=attention_sinks,
               logit_softcap=logit_softcap, backend=backend,
               interpret=interpret)
 
-    def shard_fn(q, kp, vp, bt, clen):
-        return _paged_shard_attend(q, kp, vp, bt, clen, **kw)
+    def shard_fn(q, kp, vp, bt, clen, *scales):
+        skw = dict(zip(("k_scale", "v_scale"), scales))
+        return _paged_shard_attend(q, kp, vp, bt, clen, **kw, **skw)
 
+    operands = [q, k_pool, v_pool, block_tables, cache_len]
+    in_specs = [P(axis, None, None), P(None, None, None, None),
+                P(None, None, None, None), P(axis, None), P(axis)]
+    if k_scale is not None:
+        operands += [k_scale, v_scale]
+        in_specs += [P(None, None, None)] * 2
     return _shard_map_norep(
-        shard_fn, mesh=mesh,
-        in_specs=(P(axis, None, None), P(None, None, None, None),
-                  P(None, None, None, None), P(axis, None), P(axis)),
+        shard_fn, mesh=mesh, in_specs=tuple(in_specs),
         out_specs=P(axis, None, None),
-    )(q, k_pool, v_pool, block_tables, cache_len)
+    )(*operands)
 
 
 def block_parallel_paged_decode_attention(mesh: Mesh, axis: str, q, k_pool,
@@ -248,7 +267,8 @@ def block_parallel_paged_decode_attention(mesh: Mesh, axis: str, q, k_pool,
                                           attention_sinks: int = 0,
                                           logit_softcap: float = 0.0,
                                           backend: str = "jnp",
-                                          interpret: bool = False):
+                                          interpret: bool = False,
+                                          k_scale=None, v_scale=None):
     """Block-level split: ONE sequence's KV spans every pool device.
 
     The pool's block axis is sharded over `axis` (device s holds global
@@ -262,15 +282,20 @@ def block_parallel_paged_decode_attention(mesh: Mesh, axis: str, q, k_pool,
     kernel with return_partials=True, or the positions-aware jnp reference —
     and ``psum_combine`` merges exactly; only the tiny triple crosses chips,
     never KV. A device with zero live blocks for a sequence contributes the
-    empty partial (s = 0, m = -inf), the combine identity."""
+    empty partial (s = 0, m = -inf), the combine identity. Int8 pools: the
+    scale pools shard on the same BLOCK axis as the value pools — each
+    device's partial dequantizes in-shard, and because dequant folds into
+    the per-tile score/PV products before the combine, the psum partial
+    merge is untouched (scales-follow-blocks under partitioning too)."""
     kernel_partials = backend != "jnp"
 
-    def shard_fn(q, kp, vp, bt, bp, clen):
+    def shard_fn(q, kp, vp, bt, bp, clen, *scales):
         from repro.kernels.ops import _triple_to_partial
         from repro.kernels.paged_decode_attention import paged_decode_attention
         from repro.models.attention import \
             paged_decode_attention_partial_pos_jnp
 
+        skw = dict(zip(("k_scale", "v_scale"), scales))
         bt, bp = bt[0], bp[0]
         B, H, hd = q.shape
         if kernel_partials:
@@ -279,21 +304,26 @@ def block_parallel_paged_decode_attention(mesh: Mesh, axis: str, q, k_pool,
                 q.reshape(B, Hkv, H // Hkv, hd), kp, vp, bt, clen,
                 block_positions=bp, sliding_window=sliding_window,
                 attention_sinks=attention_sinks, logit_softcap=logit_softcap,
-                interpret=interpret, return_partials=True)
+                interpret=interpret, return_partials=True, **skw)
             part = _triple_to_partial(o, l, m, B, H, hd)
         else:
             part = paged_decode_attention_partial_pos_jnp(
                 q, kp, vp, bt, bp, clen, window_total=clen,
                 sliding_window=sliding_window,
-                attention_sinks=attention_sinks, logit_softcap=logit_softcap)
+                attention_sinks=attention_sinks, logit_softcap=logit_softcap,
+                **skw)
         return C.finalize(C.psum_combine(part, axis)).astype(q.dtype)
 
+    operands = [q, k_pool, v_pool, shard_tables, shard_positions, cache_len]
+    in_specs = [P(), P(None, axis, None, None), P(None, axis, None, None),
+                P(axis, None, None), P(axis, None, None), P()]
+    if k_scale is not None:
+        operands += [k_scale, v_scale]
+        in_specs += [P(None, axis, None)] * 2
     return _shard_map_norep(
-        shard_fn, mesh=mesh,
-        in_specs=(P(), P(None, axis, None, None), P(None, axis, None, None),
-                  P(axis, None, None), P(axis, None, None), P()),
+        shard_fn, mesh=mesh, in_specs=tuple(in_specs),
         out_specs=P(),
-    )(q, k_pool, v_pool, shard_tables, shard_positions, cache_len)
+    )(*operands)
 
 
 # ---------------------------------------------------------------------------

@@ -140,19 +140,35 @@ def mtime(cfg: ModelConfig, batch: int, hw: HardwareSpec,
     return max(t_compute, t_memory)
 
 
+def kv_quant_factor(cfg: ModelConfig) -> float:
+    """Per-token KV byte ratio of the int8 quantized pool vs the bf16
+    baseline: (hd·1 + 4 fp32-scale bytes) / (hd·e) per token-head — the
+    §7 extension the serving engines implement (``kv_dtype="int8"``).
+    ≈ 0.53 for hd = 128; both capacity (max batch) and per-iteration
+    attention reads scale by it."""
+    hd = cfg.resolved_head_dim
+    return (hd + 4.0) / (hd * BYTES_PER_EL)
+
+
 def atime(cfg: ModelConfig, batch: int, seq_len: float, hw: HardwareSpec,
-          n_devices: int = 1, efficiency: float = 0.8) -> float:
+          n_devices: int = 1, efficiency: float = 0.8,
+          kv_byte_factor: float = 1.0) -> float:
     """One decode iteration of all attention operators (paper §2.2.2).
 
     BGEMV: every KV byte is read once; flops = 4·B·l·d_kv·G per layer pair
-    (qk + pv); arithmetic intensity ≈ G, constant in B."""
+    (qk + pv); arithmetic intensity ≈ G, constant in B.
+    ``kv_byte_factor`` scales the per-token KV footprint (int8 quantized
+    pool: :func:`kv_quant_factor`)."""
     kv_bytes = kv_bytes_per_token(cfg) * batch * seq_len
     if kv_bytes == 0.0:  # attention-free
         return 0.0
     G = cfg.gqa_group
+    # flops follow the DEQUANTIZED elements (quantization shrinks bytes
+    # read, not MACs); memory follows the wire/pool bytes
     flops = kv_bytes / BYTES_PER_EL * 2.0 * G
     t_compute = flops / (n_devices * hw.flops * efficiency)
-    t_memory = kv_bytes / (n_devices * hw.mem_bw * efficiency)
+    t_memory = kv_bytes * kv_byte_factor / (n_devices * hw.mem_bw *
+                                            efficiency)
     return max(t_compute, t_memory)
 
 
@@ -261,11 +277,13 @@ def max_batch_homogeneous(cfg: ModelConfig, seq_len: float,
 
 def max_batch_disaggregated(cfg: ModelConfig, seq_len: float,
                             hw_attn: HardwareSpec, n_attn: int,
-                            mem_util: float = 0.9) -> int:
+                            mem_util: float = 0.9,
+                            kv_byte_factor: float = 1.0) -> int:
     """KV lives only on the attention pool (paper §4: model workers hold
-    weights, attention workers hold KV)."""
+    weights, attention workers hold KV). ``kv_byte_factor`` scales the
+    per-token footprint (int8 pool admits ~2× the batch)."""
     budget = n_attn * hw_attn.mem_bytes * mem_util
-    per_req = kv_bytes_per_token(cfg) * seq_len
+    per_req = kv_bytes_per_token(cfg) * kv_byte_factor * seq_len
     return max(int(budget / per_req), 0) if per_req > 0 else 1 << 16
 
 
@@ -286,14 +304,19 @@ def estimate_lamina(cfg: ModelConfig, seq_len: float,
                     dop: Tuple[int, int], batch: Optional[int] = None,
                     stack: NetworkStack = NETWORK_STACKS["fhbn"],
                     pipelined: bool = True,
-                    overlap_fraction: float = 0.3) -> ServingEstimate:
+                    overlap_fraction: float = 0.3,
+                    kv_byte_factor: float = 1.0) -> ServingEstimate:
     """Paper's system: model on `a` compute devices, attention on `b` memory
-    devices, staggered pipelining overlaps the two pools (§4.3)."""
+    devices, staggered pipelining overlaps the two pools (§4.3).
+    ``kv_byte_factor`` < 1 models the quantized KV pool (§7): the pool
+    admits a proportionally larger batch AND each iteration reads
+    proportionally fewer KV bytes."""
     a, b = dop
-    B = batch or max_batch_disaggregated(cfg, seq_len, hw_attn, b)
+    B = batch or max_batch_disaggregated(cfg, seq_len, hw_attn, b,
+                                         kv_byte_factor=kv_byte_factor)
     B = max(B, 1)
     t_m = mtime(cfg, B, hw_model, a)
-    t_a = atime(cfg, B, seq_len, hw_attn, b)
+    t_a = atime(cfg, B, seq_len, hw_attn, b, kv_byte_factor=kv_byte_factor)
     t_net = network_time_per_iteration(cfg, B, stack, overlap_fraction)
     tbt = t_m + t_a + t_net
     if pipelined:

@@ -36,6 +36,7 @@ def decode_attention(q, k_cache, v_cache, cache_len, *, block_k: int = 512,
 
 def paged_prefill_chunk_attention(q, k_pool, v_pool, block_table,
                                   k_chunk, v_chunk, *, backend: str = "jnp",
+                                  k_scale=None, v_scale=None,
                                   sliding_window: int = 0,
                                   attention_sinks: int = 0,
                                   logit_softcap: float = 0.0):
@@ -50,7 +51,8 @@ def paged_prefill_chunk_attention(q, k_pool, v_pool, block_table,
     whose math is bit-identical to the corresponding rows of a one-shot
     prefill (the serving engines' default path — see
     ``kernels/paged_prefill_attention.py``)."""
-    kw = dict(sliding_window=sliding_window, attention_sinks=attention_sinks,
+    kw = dict(k_scale=k_scale, v_scale=v_scale,
+              sliding_window=sliding_window, attention_sinks=attention_sinks,
               logit_softcap=logit_softcap)
     if backend == "pallas":
         return _ppa.paged_prefill_chunk_attention(
@@ -113,6 +115,7 @@ def _pallas_decode_partial_backend(q, k_cache, v_cache, cache_len, *,
 
 def _pallas_paged_decode_partial_backend(q, k_pool, v_pool, block_tables,
                                          cache_len, *,
+                                         k_scale=None, v_scale=None,
                                          sliding_window: int = 0,
                                          attention_sinks: int = 0,
                                          logit_softcap: float = 0.0):
@@ -126,7 +129,8 @@ def _pallas_paged_decode_partial_backend(q, k_pool, v_pool, block_tables,
     sw, sinks, clen = _serving_window(sliding_window, attention_sinks,
                                       cache_len)
     o, l, m = _pda.paged_decode_attention(
-        qg, k_pool, v_pool, block_tables, clen, sliding_window=sw,
+        qg, k_pool, v_pool, block_tables, clen,
+        k_scale=k_scale, v_scale=v_scale, sliding_window=sw,
         attention_sinks=sinks, logit_softcap=logit_softcap,
         interpret=_INTERPRET, return_partials=True)
     return _triple_to_partial(o, l, m, B, H, hd)
@@ -134,6 +138,7 @@ def _pallas_paged_decode_partial_backend(q, k_pool, v_pool, block_tables,
 
 def pallas_paged_decode_partial_pos(q, k_pool, v_pool, block_tables,
                                     block_positions, cache_len, *,
+                                    k_scale=None, v_scale=None,
                                     sliding_window: int = 0,
                                     attention_sinks: int = 0,
                                     logit_softcap: float = 0.0):
@@ -148,7 +153,8 @@ def pallas_paged_decode_partial_pos(q, k_pool, v_pool, block_tables,
                                       cache_len)
     o, l, m = _pda.paged_decode_attention(
         qg, k_pool, v_pool, block_tables, clen,
-        block_positions=block_positions, sliding_window=sw,
+        block_positions=block_positions,
+        k_scale=k_scale, v_scale=v_scale, sliding_window=sw,
         attention_sinks=sinks, logit_softcap=logit_softcap,
         interpret=_INTERPRET, return_partials=True)
     return _triple_to_partial(o, l, m, B, H, hd)

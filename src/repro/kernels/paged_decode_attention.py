@@ -116,6 +116,80 @@ def _paged_decode_kernel(bt_ref, bp_ref, len_ref, q_ref, k_ref, v_ref,
         mo_ref[0, 0] = m_ref[...]   # partial max
 
 
+def _paged_decode_kernel_int8(bt_ref, bp_ref, len_ref, q_ref, k_ref, v_ref,
+                              ks_ref, vs_ref, o_ref, lo_ref, mo_ref,
+                              acc_ref, m_ref, l_ref, *,
+                              block_size: int, sliding_window: int,
+                              attention_sinks: int, logit_softcap: float,
+                              nb: int):
+    """int8-pool variant of :func:`_paged_decode_kernel`: k/v tiles arrive
+    quantized with per-token fp32 scale tiles ``(block_size,)`` riding the
+    same block-table walk, and dequantization fuses into the score / PV
+    products as ONE broadcast multiply per (G, block_size) tile — the k
+    scale folds into ``s`` right after the QK product (before softcap, where
+    the dense int8 reference applies it), the v scale folds into ``p``
+    before the PV product. No dequantized (block_size, hd) slab is ever
+    built; the bf16 kernel above is untouched."""
+    b = pl.program_id(0)
+    kb = pl.program_id(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)          # (G, hd)
+    k = k_ref[0, 0].astype(jnp.float32)          # (block_size, hd) int8->f32
+    v = v_ref[0, 0].astype(jnp.float32)
+    ks = ks_ref[0, 0]                            # (block_size,) fp32 scales
+    vs = vs_ref[0, 0]
+    cache_len = len_ref[b]
+
+    pos = bp_ref[b, kb] + jax.lax.broadcasted_iota(
+        jnp.int32, (1, block_size), 1)[0]        # (block_size,)
+    row_valid = pos < cache_len
+    if sliding_window > 0:
+        in_window = pos >= (cache_len - sliding_window)
+        if attention_sinks > 0:
+            in_window |= pos < attention_sinks
+        row_valid &= in_window
+    # int8 loads are always finite, but stale scales are arbitrary (finite)
+    # numbers — zero v under the mask exactly like the bf16 kernel so the
+    # masked columns contribute exact zeros through the zeroed p
+    v = jnp.where(row_valid[:, None], v, 0.0)
+
+    hd = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    s = jax.lax.dot_general(q * scale, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (G, bs)
+    s = s * ks[None, :]                          # fused k-dequant (pre-cap)
+    if logit_softcap > 0.0:
+        s = logit_softcap * jnp.tanh(s / logit_softcap)
+    valid = jnp.broadcast_to(row_valid[None, :], s.shape)
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, jnp.broadcast_to(m_cur, m_prev.shape))
+    alpha = jnp.exp(m_prev[:, :1] - m_new[:, :1])
+    p = jnp.exp(s - m_new[:, :1])
+    p = jnp.where(valid, p, 0.0)
+    l_new = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p * vs[None, :], v, (((1,), (0,)), ((), ())),  # fused v-dequant
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+    l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(kb == nb - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[:, :1], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+        lo_ref[0, 0] = l_ref[...]
+        mo_ref[0, 0] = m_ref[...]
+
+
 def default_block_positions(B: int, nb: int, block_size: int) -> jax.Array:
     """Contiguous-table base positions: slot j starts at j·block_size."""
     return jnp.broadcast_to(
@@ -128,6 +202,7 @@ def default_block_positions(B: int, nb: int, block_size: int) -> jax.Array:
                                              "return_partials"))
 def paged_decode_attention(q, k_pool, v_pool, block_tables, cache_len, *,
                            block_positions=None,
+                           k_scale=None, v_scale=None,
                            sliding_window: int = 0, attention_sinks: int = 0,
                            logit_softcap: float = 0.0,
                            interpret: bool = False,
@@ -138,6 +213,11 @@ def paged_decode_attention(q, k_pool, v_pool, block_tables, cache_len, *,
     live tokens. block_positions: optional (B, nb) int32 global base position
     per table slot (defaults to the contiguous slot·block_size; block-sharded
     callers pass their shard's true positions, POS_PAD on foreign slots).
+    k_scale/v_scale: optional (Hkv, num_blocks, block_size) fp32 per-token
+    scale pools for an int8 k_pool/v_pool — when given, the int8 kernel
+    variant streams the scale tiles through the SAME block-table walk and
+    fuses dequantization into the score/PV products (no dense dequantized
+    slab, in VMEM or HBM).
     Returns (B, Hkv, G, hd), or the (o, l, m) §4.2.2 triple over the cached
     subset when return_partials — mergeable with other partials (e.g. across
     the pool mesh axis via ``core.combine.psum_combine``).
@@ -152,22 +232,27 @@ def paged_decode_attention(q, k_pool, v_pool, block_tables, cache_len, *,
     if block_positions is None:
         block_positions = default_block_positions(B, nb, block_size)
     block_positions = block_positions.astype(jnp.int32)
+    quantized = k_scale is not None
 
     kernel = functools.partial(
-        _paged_decode_kernel, block_size=block_size,
+        _paged_decode_kernel_int8 if quantized else _paged_decode_kernel,
+        block_size=block_size,
         sliding_window=sliding_window, attention_sinks=attention_sinks,
         logit_softcap=logit_softcap, nb=nb)
+    kv_spec = pl.BlockSpec((1, 1, block_size, hd),
+                           lambda b, h, kb, bt, bp, ln: (h, bt[b, kb], 0, 0))
+    # scale tiles ride the same prefetched table walk as their value tiles
+    scale_spec = pl.BlockSpec((1, 1, block_size),
+                              lambda b, h, kb, bt, bp, ln: (h, bt[b, kb], 0))
+    in_specs = [
+        pl.BlockSpec((1, 1, G, hd),
+                     lambda b, h, kb, bt, bp, ln: (b, h, 0, 0)),
+        kv_spec, kv_spec,
+    ] + ([scale_spec, scale_spec] if quantized else [])
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,   # block_tables, block_positions, cache_len
         grid=(B, Hkv, nb),       # kb innermost: scratch carries the combine
-        in_specs=[
-            pl.BlockSpec((1, 1, G, hd),
-                         lambda b, h, kb, bt, bp, ln: (b, h, 0, 0)),
-            pl.BlockSpec((1, 1, block_size, hd),
-                         lambda b, h, kb, bt, bp, ln: (h, bt[b, kb], 0, 0)),
-            pl.BlockSpec((1, 1, block_size, hd),
-                         lambda b, h, kb, bt, bp, ln: (h, bt[b, kb], 0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=(
             pl.BlockSpec((1, 1, G, hd),
                          lambda b, h, kb, bt, bp, ln: (b, h, 0, 0)),
@@ -182,6 +267,9 @@ def paged_decode_attention(q, k_pool, v_pool, block_tables, cache_len, *,
             pltpu.VMEM((G, 128), jnp.float32),   # running denom
         ],
     )
+    operands = (block_tables, block_positions, cache_len, q, k_pool, v_pool)
+    if quantized:
+        operands += (k_scale, v_scale)
     out, l_out, m_out = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
@@ -191,7 +279,7 @@ def paged_decode_attention(q, k_pool, v_pool, block_tables, cache_len, *,
             jax.ShapeDtypeStruct((B, Hkv, G, 128), jnp.float32),
         ),
         interpret=interpret,
-    )(block_tables, block_positions, cache_len, q, k_pool, v_pool)
+    )(*operands)
     if return_partials:
         return out, l_out[..., 0], m_out[..., 0]
     return out
@@ -207,16 +295,32 @@ def paged_gather_dense(k_pool, v_pool, block_tables):
     return (kc.reshape(B, Hkv, nb * bs, hd), vc.reshape(B, Hkv, nb * bs, hd))
 
 
+def paged_gather_scales(scale_pool, block_tables):
+    """Block-table gather of a (Hkv, num_blocks, bs) scale pool into the
+    dense (B, Hkv, nb·bs) per-token view the dense int8 references fold into
+    the score/PV einsums — reference data path only."""
+    Hkv, _, bs = scale_pool.shape
+    B, nb = block_tables.shape
+    s = jnp.swapaxes(scale_pool[:, block_tables], 0, 1)  # (B, Hkv, nb, bs)
+    return s.reshape(B, Hkv, nb * bs)
+
+
 def paged_decode_attention_jnp(q, k_pool, v_pool, block_tables, cache_len, *,
+                               k_scale=None, v_scale=None,
                                sliding_window: int = 0,
                                attention_sinks: int = 0,
                                logit_softcap: float = 0.0):
     """Pure-jnp reference for the paged kernel (CPU tests): gathers the dense
-    view through the block table and runs the dense oracle math."""
+    view through the block table and runs the dense oracle math (int8 pools
+    additionally gather the scale pools and fold them into the einsums)."""
     from repro.kernels import ref
 
     kc, vc = paged_gather_dense(k_pool, v_pool, block_tables)
+    kw = {}
+    if k_scale is not None:
+        kw = {"k_scale": paged_gather_scales(k_scale, block_tables),
+              "v_scale": paged_gather_scales(v_scale, block_tables)}
     return ref.decode_attention_ref(q, kc, vc, cache_len,
                                     sliding_window=sliding_window,
                                     attention_sinks=attention_sinks,
-                                    logit_softcap=logit_softcap)
+                                    logit_softcap=logit_softcap, **kw)

@@ -86,6 +86,14 @@ def main() -> None:
                          "most one chunk runs per engine step alongside "
                          "the full decode batch). 0 = one-shot prefill")
     ap.add_argument("--backend", default="jnp", choices=["jnp", "pallas"])
+    ap.add_argument("--kv-dtype", default="bf16", choices=["bf16", "int8"],
+                    help="KV block pool storage dtype: bf16 (the model "
+                         "dtype) or int8 with per-token per-kv-head fp32 "
+                         "scales — ~2x pool residency and decode KV-read "
+                         "bytes, dequant fused into the attention kernels "
+                         "(applies to every mode incl. prefill/decode/"
+                         "router tiers; both tiers of a disaggregated "
+                         "pair must agree)")
     ap.add_argument("--events", action="store_true",
                     help="print the iteration-level lifecycle event stream")
     ap.add_argument("--kv-shards", type=int, default=0,
@@ -127,6 +135,7 @@ def main() -> None:
         max_batch=args.max_batch, num_blocks=args.num_blocks,
         kv_shards=args.kv_shards or None,
         scheduler=args.scheduler, decode_backend=args.backend,
+        kv_dtype=args.kv_dtype,
         prefix_sharing=args.prefix_sharing,
         prefill_chunk_tokens=args.prefill_chunk_tokens or None,
         fault_retry_limit=args.fault_retry_limit,
@@ -167,6 +176,10 @@ def main() -> None:
         print(f"chunked_prefill chunk_tokens={args.prefill_chunk_tokens} "
               f"prefill_chunks_run={s['prefill_chunks_run']} "
               f"max_prefill_slab_tokens={s['max_prefill_slab_tokens']}")
+    if args.kv_dtype != "bf16":
+        print(f"kv_pool dtype={args.kv_dtype} "
+              f"resident_bytes={s['kv_pool_bytes_resident']} "
+              f"read_bytes_per_step={s['kv_bytes_read_per_step']:.0f}")
     if args.prefix_sharing:
         print(f"prefix_sharing blocks_shared={s['blocks_shared']} "
               f"prefill_tokens_skipped={s['prefill_tokens_skipped']} "

@@ -245,6 +245,7 @@ register_decode_backend("jnp", decode_attention_partial_jnp)
 
 def paged_decode_attention_partial_jnp(q, k_pool, v_pool, block_tables,
                                        cache_len, *,
+                                       k_scale=None, v_scale=None,
                                        sliding_window: int = 0,
                                        attention_sinks: int = 0,
                                        logit_softcap: float = 0.0):
@@ -254,13 +255,22 @@ def paged_decode_attention_partial_jnp(q, k_pool, v_pool, block_tables,
     block_tables: (B, nb) int32; cache_len: (B,) stored tokens. Gathers the
     dense head-major view through the table (the copy the Pallas kernel
     avoids) and reuses the dense partial math, so 'jnp' and 'pallas' paged
-    backends are bit-comparable."""
-    from repro.kernels.paged_decode_attention import paged_gather_dense
+    backends are bit-comparable. k_scale/v_scale: optional
+    (Hkv, num_blocks, block_size) fp32 scale pools for int8 k_pool/v_pool —
+    gathered through the same table and folded into the score/PV einsums
+    (the dense reference may gather; only the kernels are bound by the
+    no-dense-dequant invariant)."""
+    from repro.kernels.paged_decode_attention import (paged_gather_dense,
+                                                      paged_gather_scales)
 
     kc, vc = paged_gather_dense(k_pool, v_pool, block_tables)
+    kw = {}
+    if k_scale is not None:
+        kw = {"k_scale": paged_gather_scales(k_scale, block_tables),
+              "v_scale": paged_gather_scales(v_scale, block_tables)}
     return decode_attention_partial_jnp(
         q, kc, vc, cache_len, sliding_window=sliding_window,
-        attention_sinks=attention_sinks, logit_softcap=logit_softcap)
+        attention_sinks=attention_sinks, logit_softcap=logit_softcap, **kw)
 
 
 register_paged_decode_backend("jnp", paged_decode_attention_partial_jnp)
@@ -268,6 +278,7 @@ register_paged_decode_backend("jnp", paged_decode_attention_partial_jnp)
 
 def paged_decode_attention_partial_pos_jnp(q, k_pool, v_pool, block_tables,
                                            block_positions, cache_len, *,
+                                           k_scale=None, v_scale=None,
                                            window_total=None,
                                            sliding_window: int = 0,
                                            attention_sinks: int = 0,
@@ -287,23 +298,31 @@ def paged_decode_attention_partial_pos_jnp(q, k_pool, v_pool, block_tables,
     kc, vc = paged_gather_dense(k_pool, v_pool, block_tables)
     pos = (block_positions[:, :, None] +
            jnp.arange(bs, dtype=jnp.int32)[None, None, :]).reshape(B, nb * bs)
+    kw = {}
+    if k_scale is not None:
+        from repro.kernels.paged_decode_attention import paged_gather_scales
+        kw = {"k_scale": paged_gather_scales(k_scale, block_tables),
+              "v_scale": paged_gather_scales(v_scale, block_tables)}
     return decode_attention_partial_jnp(
         q, kc, vc, cache_len, sliding_window=sliding_window,
         attention_sinks=attention_sinks, logit_softcap=logit_softcap,
-        positions=pos, window_total=window_total)
+        positions=pos, window_total=window_total, **kw)
 
 
 def paged_decode_attention_partial_pos(q, k_pool, v_pool, block_tables,
                                        block_positions, cache_len, *,
                                        backend: str = "jnp",
+                                       k_scale=None, v_scale=None,
                                        sliding_window: int = 0,
                                        attention_sinks: int = 0,
                                        logit_softcap: float = 0.0):
     """Backend dispatch for the positions-aware paged partial (serving
     contract: window anchored to cache_len + 1). 'pallas' streams the
     shard's pool slice through the paged kernel in place — no gather;
-    'jnp' is the CPU gather reference."""
-    kw = dict(sliding_window=sliding_window, attention_sinks=attention_sinks,
+    'jnp' is the CPU gather reference. k_scale/v_scale: optional int8-pool
+    scale pools, fused in-kernel on 'pallas' (no dense dequant)."""
+    kw = dict(k_scale=k_scale, v_scale=v_scale,
+              sliding_window=sliding_window, attention_sinks=attention_sinks,
               logit_softcap=logit_softcap)
     if backend == "pallas":
         from repro.kernels import ops
@@ -331,6 +350,7 @@ def _new_token_partial(q, k_new, v_new, *, logit_softcap: float = 0.0):
 def paged_decode_attention_combine(q, k_pool, v_pool, block_tables,
                                    cache_len, k_new, v_new, *,
                                    backend: str = "jnp",
+                                   k_scale=None, v_scale=None,
                                    sliding_window: int = 0,
                                    attention_sinks: int = 0,
                                    logit_softcap: float = 0.0) -> jax.Array:
@@ -344,10 +364,13 @@ def paged_decode_attention_combine(q, k_pool, v_pool, block_tables,
     if backend not in _PAGED_DECODE_BACKENDS and backend == "pallas":
         import repro.kernels.ops  # noqa: F401 — registers the kernel backend
 
+    kw = {}
+    if k_scale is not None:
+        kw = {"k_scale": k_scale, "v_scale": v_scale}
     p_prev = _PAGED_DECODE_BACKENDS[backend](
         q, k_pool, v_pool, block_tables, cache_len,
         sliding_window=sliding_window, attention_sinks=attention_sinks,
-        logit_softcap=logit_softcap)
+        logit_softcap=logit_softcap, **kw)
     p_new = _new_token_partial(q, k_new, v_new, logit_softcap=logit_softcap)
     return C.finalize(C.combine(p_prev, p_new)).astype(q.dtype)
 
@@ -408,6 +431,8 @@ def attention_forward(params, cfg: ModelConfig, x: jax.Array,
                       prefix_kv: Optional[Tuple[jax.Array, jax.Array]] = None,
                       paged_prefix: Optional[Tuple[jax.Array, jax.Array,
                                                    jax.Array]] = None,
+                      paged_prefix_scales: Optional[Tuple[jax.Array,
+                                                          jax.Array]] = None,
                       backend: str = "jnp") -> jax.Array:
     """Full-sequence attention (train / prefill). x: (B, S, d).
 
@@ -439,18 +464,28 @@ def attention_forward(params, cfg: ModelConfig, x: jax.Array,
             raise ValueError("paged_prefix serves the per-request prefill "
                              f"shape (B == 1); got B={x.shape[0]}")
         kp_pool, vp_pool, table = paged_prefix
+        ks_pool = vs_pool = None
+        if paged_prefix_scales is not None:
+            ks_pool, vs_pool = paged_prefix_scales
         if backend == "pallas":
             from repro.kernels import ops
             out = ops.paged_prefill_chunk_attention(
                 q[0], kp_pool, vp_pool, table, k[0], v[0], backend="pallas",
+                k_scale=ks_pool, v_scale=vs_pool,
                 sliding_window=int(window),
                 attention_sinks=cfg.attention_sinks if window else 0,
                 logit_softcap=cfg.attn_logit_softcap)[None]
             return out_project(params, out), k, v
         Hkv, _, bs, hd = kp_pool.shape
         P = table.shape[0] * bs
-        prefix_kv = (kp_pool[:, table].reshape(Hkv, P, hd)[None],
-                     vp_pool[:, table].reshape(Hkv, P, hd)[None])
+        kp_d = kp_pool[:, table].reshape(Hkv, P, hd)
+        vp_d = vp_pool[:, table].reshape(Hkv, P, hd)
+        if ks_pool is not None:  # int8 pool: dequantize the gathered copy
+            ks_d = ks_pool[:, table].reshape(Hkv, P)
+            vs_d = vs_pool[:, table].reshape(Hkv, P)
+            kp_d = (kp_d.astype(jnp.float32) * ks_d[..., None]).astype(k.dtype)
+            vp_d = (vp_d.astype(jnp.float32) * vs_d[..., None]).astype(v.dtype)
+        prefix_kv = (kp_d[None], vp_d[None])
     k_all, v_all = k, v
     if prefix_kv is not None:
         pk, pv = prefix_kv           # head-major -> seq-major for blockwise
@@ -496,7 +531,8 @@ def attention_decode_step_paged(params, cfg: ModelConfig, x: jax.Array,
                                 block_tables: jax.Array,
                                 cache_len: jax.Array, *,
                                 is_local: bool = False,
-                                backend: str = "jnp"):
+                                backend: str = "jnp",
+                                k_scale=None, v_scale=None):
     """One-token decode straight over the paged block pool (the serving hot
     path — no dense per-step gather). x: (B, 1, d); pools HEAD-MAJOR
     (Hkv, num_blocks, block_size, hd); block_tables (B, nb);
@@ -507,7 +543,8 @@ def attention_decode_step_paged(params, cfg: ModelConfig, x: jax.Array,
     window = cfg.sliding_window if (is_local or not cfg.local_global) else 0
     out = paged_decode_attention_combine(
         q[:, 0], k_pool, v_pool, block_tables, cache_len, k[:, 0], v[:, 0],
-        backend=backend, sliding_window=int(window),
+        backend=backend, k_scale=k_scale, v_scale=v_scale,
+        sliding_window=int(window),
         attention_sinks=cfg.attention_sinks if window else 0,
         logit_softcap=cfg.attn_logit_softcap)
     y = out_project(params, out[:, None])

@@ -47,7 +47,9 @@ def dense_block(params: Dict, cfg: ModelConfig, x: jax.Array, *,
                 backend: str = "jnp", moe_group_size: int = 256,
                 prefix_kv: Optional[Tuple[jax.Array, jax.Array]] = None,
                 paged_prefix: Optional[Tuple[jax.Array, jax.Array,
-                                             jax.Array]] = None
+                                             jax.Array]] = None,
+                paged_prefix_scales: Optional[Tuple[jax.Array,
+                                                    jax.Array]] = None
                 ) -> Tuple[jax.Array, Dict, jax.Array]:
     """Returns (x, new_cache_entries, aux_loss). ``prefix_kv`` (prefill
     only): this layer's head-major (B, Hkv, P, hd) K/V of an already-cached
@@ -61,7 +63,9 @@ def dense_block(params: Dict, cfg: ModelConfig, x: jax.Array, *,
             attn, k_new, v_new = attention_decode_step_paged(
                 params["attn"], cfg, h, cache["k_pool"], cache["v_pool"],
                 cache["block_tables"], cache["len"],
-                is_local=is_local, backend=backend)
+                is_local=is_local, backend=backend,
+                k_scale=cache.get("k_scale_pool"),
+                v_scale=cache.get("v_scale_pool"))
         else:
             attn, k_new, v_new = attention_decode_step(
                 params["attn"], cfg, h, cache["k"], cache["v"], cache["len"],
@@ -72,6 +76,7 @@ def dense_block(params: Dict, cfg: ModelConfig, x: jax.Array, *,
         attn, k, v = attention_forward(params["attn"], cfg, h, positions,
                                        is_local=is_local, prefix_kv=prefix_kv,
                                        paged_prefix=paged_prefix,
+                                       paged_prefix_scales=paged_prefix_scales,
                                        backend=backend)
         if mode == "prefill":
             new_cache = {"k": k, "v": v}

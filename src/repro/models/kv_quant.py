@@ -28,8 +28,16 @@ def quantize_kv(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
 
 
 def dequantize_kv(q: jax.Array, scale: jax.Array,
-                  dtype=jnp.bfloat16) -> jax.Array:
-    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+                  dtype=None) -> jax.Array:
+    """Dequantize int8 values back to ``dtype``.
+
+    ``dtype`` comes from the caller (the pool/compute dtype — e.g.
+    ``ModelConfig.dtype``); ``None`` keeps the fp32 math dtype rather than
+    silently casting to bfloat16, so gemma2/llama3 configs with differing
+    activation dtypes round-trip exactly.
+    """
+    out = q.astype(jnp.float32) * scale[..., None]
+    return out if dtype is None else out.astype(dtype)
 
 
 def quantize_token(k_new: jax.Array) -> Tuple[jax.Array, jax.Array]:

@@ -16,7 +16,7 @@ Per-layer params are stacked on axis 0 so every stack lowers as one
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -546,7 +546,9 @@ def prefill_suffix(params: Params, cfg: ModelConfig, batch: Dict,
 
 def prefill_chunk(params: Params, cfg: ModelConfig, batch: Dict,
                   k_pool: jax.Array, v_pool: jax.Array,
-                  prefix_blocks: jax.Array, *, backend: str = "jnp"
+                  prefix_blocks: jax.Array, *, backend: str = "jnp",
+                  k_scale_pool: Optional[jax.Array] = None,
+                  v_scale_pool: Optional[jax.Array] = None
                   ) -> Tuple[jax.Array, Dict]:
     """Chunked paged prefill: run ONE block-aligned chunk of a prompt, its
     queries attending over the ALREADY-WRITTEN pool blocks plus the
@@ -574,7 +576,12 @@ def prefill_chunk(params: Params, cfg: ModelConfig, batch: Dict,
     Dense/vlm/moe stacked-layer stacks only. NOTE: for MoE families the
     chunk boundary changes capacity-dispatch groups, so chunked outputs are
     NOT bit-stable against the one-shot prefill — the serving engine runs
-    MoE prompts one-shot (same reason prefix sharing recomputes them)."""
+    MoE prompts one-shot (same reason prefix sharing recomputes them).
+
+    k_scale_pool/v_scale_pool: the int8 pool's fp32 scale sidecars
+    (L, Hkv, num_blocks, bs), threaded per layer next to the value pools
+    (int8 readback makes chunked outputs quantization-, not chunking-,
+    dependent; chunked-vs-oneshot bit-stability is a bf16-pool contract)."""
     if cfg.family not in ("dense", "vlm", "moe"):
         raise ValueError("chunked paged prefill serves KV-cache dense "
                          f"stacks; got family={cfg.family}")
@@ -590,25 +597,35 @@ def prefill_chunk(params: Params, cfg: ModelConfig, batch: Dict,
     x, positions, _ = _embed(params, cfg, batch)
     positions = positions + P           # chunk tokens sit at P + i
     pair = 2 if cfg.local_global else 1
+    quant = k_scale_pool is not None
+    # 5-tuple scan xs either way (dummy per-layer zeros when bf16) so the
+    # scan tree structure is kv_dtype-independent
+    ks_, vs_ = (k_scale_pool, v_scale_pool) if quant else (
+        jnp.zeros((k_pool.shape[0],)), jnp.zeros((k_pool.shape[0],)))
     layers, kp, vp = params["layers"], k_pool, v_pool
     if pair == 2:
-        layers, kp, vp = jax.tree.map(
+        layers, kp, vp, ks_, vs_ = jax.tree.map(
             lambda a: a.reshape((a.shape[0] // 2, 2) + a.shape[1:]),
-            (layers, kp, vp))
+            (layers, kp, vp, ks_, vs_))
 
     def body(carry, xs):
         h, aux = carry
-        layer_p, kp_l, vp_l = xs
+        layer_p, kp_l, vp_l, ks_l, vs_l = xs
         caches = []
         for j in range(pair):
             p = _tree_index(layer_p, j) if pair == 2 else layer_p
             is_local = (j == 0) if cfg.local_global else False
+            scales = None
+            if quant:
+                scales = (ks_l[j] if pair == 2 else ks_l,
+                          vs_l[j] if pair == 2 else vs_l)
             h, c, a = blocks.dense_block(
                 p, cfg, h, mode="prefill", positions=positions,
                 is_local=is_local, backend=backend,
                 paged_prefix=(kp_l[j] if pair == 2 else kp_l,
                               vp_l[j] if pair == 2 else vp_l,
-                              prefix_blocks))
+                              prefix_blocks),
+                paged_prefix_scales=scales)
             caches.append(c)
             aux = aux + a
         ys = jax.tree.map(lambda *c: jnp.stack(c), *caches) if pair == 2 \
@@ -616,7 +633,8 @@ def prefill_chunk(params: Params, cfg: ModelConfig, batch: Dict,
         return (h, aux), ys
 
     (x, _), kv = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
-                              (layers, kp, vp), unroll=cfg.lower_unrolled)
+                              (layers, kp, vp, ks_, vs_),
+                              unroll=cfg.lower_unrolled)
     if pair == 2:
         kv = jax.tree.map(
             lambda a: a.reshape((a.shape[0] * 2,) + a.shape[2:]), kv)
@@ -786,6 +804,8 @@ def decode_step_paged(params: Params, cfg: ModelConfig, tokens: jax.Array,
                       k_pool: jax.Array, v_pool: jax.Array,
                       block_tables: jax.Array, cache_len: jax.Array, *,
                       backend: str = "jnp",
+                      k_scale_pool: Optional[jax.Array] = None,
+                      v_scale_pool: Optional[jax.Array] = None,
                       moe_group_size: int = 256) -> Tuple[jax.Array, Dict]:
     """One decoding iteration straight over the paged KV block pool — the
     serving engines' default hot path (no per-step dense gather/transposes).
@@ -795,6 +815,11 @@ def decode_step_paged(params: Params, cfg: ModelConfig, tokens: jax.Array,
     block_tables: (B, nb) int32; cache_len: (B,) tokens ALREADY stored.
     Returns (logits, updates) with k_new/v_new (L, B, Hkv, hd) — placement
     stays the memory pool's job (PagedKVCache.write_tokens).
+
+    k_scale_pool/v_scale_pool: the int8 pool's fp32 per-token scale sidecars
+    (L, Hkv, num_blocks, block_size), threaded per layer next to the value
+    pools so dequantization fuses into the attention kernels (no dense
+    dequantized slab on this path — the tentpole invariant).
     """
     if cfg.family not in ("dense", "vlm", "moe"):
         raise ValueError("paged decode serves KV-cache dense stacks; "
@@ -808,21 +833,29 @@ def decode_step_paged(params: Params, cfg: ModelConfig, tokens: jax.Array,
         x = x * jnp.asarray(jnp.sqrt(float(cfg.d_model)), x.dtype)
 
     pair = 2 if cfg.local_global else 1
+    quant = k_scale_pool is not None
+    # the scan xs keep a 5-tuple structure either way (dummy per-layer
+    # zeros when bf16) so chunked/unchunked programs share one tree shape
+    ks_, vs_ = (k_scale_pool, v_scale_pool) if quant else (
+        jnp.zeros((k_pool.shape[0],)), jnp.zeros((k_pool.shape[0],)))
     layers, kp, vp = params["layers"], k_pool, v_pool
     if pair == 2:
-        layers, kp, vp = jax.tree.map(
+        layers, kp, vp, ks_, vs_ = jax.tree.map(
             lambda a: a.reshape((a.shape[0] // 2, 2) + a.shape[1:]),
-            (layers, kp, vp))
+            (layers, kp, vp, ks_, vs_))
 
     def body(carry, xs):
         h, aux = carry
-        layer_p, kp_l, vp_l = xs
+        layer_p, kp_l, vp_l, ks_l, vs_l = xs
         new_kv = []
         for j in range(pair):
             p = _tree_index(layer_p, j) if pair == 2 else layer_p
             lc = {"k_pool": kp_l[j] if pair == 2 else kp_l,
                   "v_pool": vp_l[j] if pair == 2 else vp_l,
                   "block_tables": block_tables, "len": cur_len}
+            if quant:
+                lc["k_scale_pool"] = ks_l[j] if pair == 2 else ks_l
+                lc["v_scale_pool"] = vs_l[j] if pair == 2 else vs_l
             is_local = (j == 0) if cfg.local_global else False
             h, c, a = blocks.dense_block(
                 p, cfg, h, mode="decode", is_local=is_local, cache=lc,
@@ -834,7 +867,8 @@ def decode_step_paged(params: Params, cfg: ModelConfig, tokens: jax.Array,
         return (h, aux), ys
 
     (x, _), kv = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
-                              (layers, kp, vp), unroll=cfg.lower_unrolled)
+                              (layers, kp, vp, ks_, vs_),
+                              unroll=cfg.lower_unrolled)
     if pair == 2:
         kv = jax.tree.map(
             lambda a: a.reshape((a.shape[0] * 2,) + a.shape[2:]), kv)

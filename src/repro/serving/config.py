@@ -35,6 +35,7 @@ PLACEMENTS = ("homogeneous", "attention_pool", "moe_offload")
 PARTITIONS = ("head", "request", "block")
 SCHEDULERS = ("fcfs", "preempt")
 BACKENDS = ("jnp", "pallas")
+KV_DTYPES = ("bf16", "int8")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -59,6 +60,15 @@ class EngineConfig:
     block_size: int = 16
     kv_shards: Optional[int] = None    # None => derived (block partition
     #                                    shards the pool over the workers)
+    # Pool element dtype. "int8" stores the block pool quantized (per-token,
+    # per-kv-head symmetric max-abs scales in fp32 sidecar pools that follow
+    # every block invariant — CoW fork, refcount, quarantine, handoff) and
+    # fuses dequant into the attention kernels as a broadcast multiply per
+    # tile, halving resident pool bytes AND per-step KV read bytes (paper
+    # §3.1 / §7). Valid for every placement × partition; greedy outputs are
+    # NOT bit-identical to bf16 (quantized readback), but attention-output
+    # cosine ≥ 0.999 is test-asserted.
+    kv_dtype: str = "bf16"
 
     # ---- batching / scheduling ----
     max_batch: int = 8
@@ -115,6 +125,11 @@ class EngineConfig:
         if self.decode_backend not in BACKENDS:
             raise ValueError(f"decode_backend must be one of {BACKENDS}; "
                              f"got {self.decode_backend!r}")
+        if self.kv_dtype not in KV_DTYPES:
+            raise ValueError(
+                f"kv_dtype must be one of {KV_DTYPES}; got "
+                f"{self.kv_dtype!r} (placement={self.placement!r}, "
+                f"partition={self.partition!r})")
         for field in ("attention_workers", "expert_workers", "num_blocks",
                       "block_size", "max_batch"):
             if getattr(self, field) < 1:

@@ -34,6 +34,22 @@ private copy of just that block (placed by the SAME round-robin slot rule,
 so the shard-balance invariant survives forking), the donor keeps the
 original untouched.
 
+Quantized pool (``kv_dtype="int8"``): the pool arrays store int8 values
+with per-token, per-kv-head fp32 scales in sidecar pools
+``(L, Hkv, num_blocks, block_size)`` that mirror the value pools' block
+axis exactly — *scales follow blocks*. Every write path quantizes at write
+time (symmetric max-abs, ``models/kv_quant.py``); every block-level
+operation (copy-on-write fork, free, quarantine, round-robin placement,
+handoff export/import) moves the scale tile with its value tile, so the
+refcount/CoW/quarantine invariants hold for the scale arrays by
+construction. The decode/prefill-chunk hot paths hand the int8 pools plus
+the scale pools to the attention kernels, which fuse dequantization into
+the score/PV products as a broadcast multiply per tile — no dense
+dequantized K/V slab is ever materialised (the no-densify invariant
+extends to *no-dense-dequant*). Only the admission-time prefix gathers
+(``gather_prefix``, one per admission) and the dense test oracle
+dequantize to a materialised array.
+
 Shard quarantine (fault recovery): a shard the engine declares dead is
 masked out of the allocator (``quarantine_shard``) — the round-robin slot
 rule walks the LIVE shards only, and every capacity view (``num_free``,
@@ -66,6 +82,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.models import kv_quant
 from repro.models.common import ModelConfig
 
 # Base-position sentinel for table slots a shard does not own — the single
@@ -117,6 +134,7 @@ class PagedKVCache:
     num_blocks: int
     block_size: int = 16
     n_shards: int = 1
+    kv_dtype: str = "bf16"             # "bf16" (cfg.dtype) | "int8"
 
     def __post_init__(self):
         if self.num_blocks % self.n_shards:
@@ -124,11 +142,26 @@ class PagedKVCache:
                 f"num_blocks ({self.num_blocks}) must divide evenly over "
                 f"n_shards ({self.n_shards}) — the pool's block axis is "
                 f"sharded contiguously over the attention-pool mesh axis")
+        if self.kv_dtype not in ("bf16", "int8"):
+            raise ValueError(f"kv_dtype must be 'bf16' or 'int8'; "
+                             f"got {self.kv_dtype!r}")
         hd = self.cfg.resolved_head_dim
         L = self._n_kv_layers()
+        pool_dtype = jnp.int8 if self.kv_dtype == "int8" else self.cfg.dtype
         self.k_pool = jnp.zeros((L, self.cfg.num_kv_heads, self.num_blocks,
-                                 self.block_size, hd), self.cfg.dtype)
+                                 self.block_size, hd), pool_dtype)
         self.v_pool = jnp.zeros_like(self.k_pool)
+        # int8: per-token, per-kv-head fp32 scale pools mirroring the value
+        # pools' block axis — block-level ops move scale tiles with their
+        # value tiles ("scales follow blocks"). None on the bf16 path.
+        if self.kv_dtype == "int8":
+            self.k_scale = jnp.zeros((L, self.cfg.num_kv_heads,
+                                      self.num_blocks, self.block_size),
+                                     jnp.float32)
+            self.v_scale = jnp.zeros_like(self.k_scale)
+        else:
+            self.k_scale = None
+            self.v_scale = None
         npb = self.blocks_per_shard
         # per-shard free lists: shard s owns global ids [s·npb, (s+1)·npb)
         self._free_shard: List[List[int]] = [
@@ -355,6 +388,11 @@ class PagedKVCache:
         self._borrowed.get(seq_id, set()).discard(old)
         self.k_pool = self.k_pool.at[:, :, new].set(self.k_pool[:, :, old])
         self.v_pool = self.v_pool.at[:, :, new].set(self.v_pool[:, :, old])
+        if self.k_scale is not None:   # the scale tile forks with its block
+            self.k_scale = self.k_scale.at[:, :, new].set(
+                self.k_scale[:, :, old])
+            self.v_scale = self.v_scale.at[:, :, new].set(
+                self.v_scale[:, :, old])
         self.cow_forks += 1
 
     def blocks_to_append(self, seq_id: int) -> int:
@@ -410,6 +448,28 @@ class PagedKVCache:
         """PHYSICAL blocks in use — a block shared by K sequences counts
         once (the memory actually occupied; what sharing saves)."""
         return self.num_blocks - sum(len(s) for s in self._free_shard)
+
+    @property
+    def pool_bytes_resident(self) -> int:
+        """Resident bytes of the whole pool allocation: value pools plus
+        (int8) the fp32 scale sidecars — the §3.1 capacity quantity
+        ``EngineStats.kv_pool_bytes_resident`` surfaces. int8 ≈ 0.5× bf16
+        for hd ≫ 4 (hd + 4 scale bytes vs 2·hd per token-head)."""
+        total = int(self.k_pool.nbytes + self.v_pool.nbytes)
+        if self.k_scale is not None:
+            total += int(self.k_scale.nbytes + self.v_scale.nbytes)
+        return total
+
+    def bytes_per_live_token(self) -> int:
+        """Pool bytes one token of context occupies (K + V across the KV
+        layers, scale sidecars included) — the per-step KV read accounting
+        unit (`kv_bytes_read_per_step ≈ live_tokens · this`)."""
+        L, Hkv, _, _, hd = self.k_pool.shape
+        e = self.k_pool.dtype.itemsize
+        per = 2 * L * Hkv * hd * e
+        if self.k_scale is not None:
+            per += 2 * L * Hkv * 4
+        return per
 
     def utilisation(self) -> float:
         toks = sum(self.lengths.values())
@@ -573,6 +633,10 @@ class PagedKVCache:
         for slot in range(b0, b0 + nb):
             if table[slot] in borrowed and self.refcounts[table[slot]] > 1:
                 self._cow_block(seq_id, slot)
+        ks = vs = None
+        if self.kv_dtype == "int8":    # quantize at write time, pre-pad
+            k, ks = kv_quant.quantize_kv(k)
+            v, vs = kv_quant.quantize_kv(v)
         pad = nb * self.block_size - S
         if pad:
             k = jnp.pad(k, [(0, 0), (0, 0), (0, pad), (0, 0)])
@@ -583,6 +647,13 @@ class PagedKVCache:
         idx = jnp.asarray(table[b0:b0 + nb])
         self.k_pool = self.k_pool.at[:, :, idx].set(kb)
         self.v_pool = self.v_pool.at[:, :, idx].set(vb)
+        if ks is not None:
+            if pad:
+                ks = jnp.pad(ks, [(0, 0), (0, 0), (0, pad)])
+                vs = jnp.pad(vs, [(0, 0), (0, 0), (0, pad)])
+            shp = (ks.shape[0], ks.shape[1], nb, self.block_size)
+            self.k_scale = self.k_scale.at[:, :, idx].set(ks.reshape(shp))
+            self.v_scale = self.v_scale.at[:, :, idx].set(vs.reshape(shp))
 
     def write_prefill_chunk(self, seq_id: int, k: jax.Array, v: jax.Array,
                             start_token: int) -> None:
@@ -619,6 +690,11 @@ class PagedKVCache:
             self._cow_block(seq_id, slot)      # never write a donor's block
         blk = self.tables[seq_id][slot]
         off = position % self.block_size
+        if self.kv_dtype == "int8":
+            k, ks = kv_quant.quantize_token(k)
+            v, vs = kv_quant.quantize_token(v)
+            self.k_scale = self.k_scale.at[:, :, blk, off].set(ks)
+            self.v_scale = self.v_scale.at[:, :, blk, off].set(vs)
         self.k_pool = self.k_pool.at[:, :, blk, off].set(k)
         self.v_pool = self.v_pool.at[:, :, blk, off].set(v)
 
@@ -639,6 +715,11 @@ class PagedKVCache:
         off = jnp.asarray([p % self.block_size for p in positions], jnp.int32)
         kn = jnp.swapaxes(k_new, 1, 2)  # (L, Hkv, B, hd)
         vn = jnp.swapaxes(v_new, 1, 2)
+        if self.kv_dtype == "int8":
+            kn, kns = kv_quant.quantize_token(kn)   # scales (L, Hkv, B)
+            vn, vns = kv_quant.quantize_token(vn)
+            self.k_scale = self.k_scale.at[:, :, blk, off].set(kns)
+            self.v_scale = self.v_scale.at[:, :, blk, off].set(vns)
         self.k_pool = self.k_pool.at[:, :, blk, off].set(kn)
         self.v_pool = self.v_pool.at[:, :, blk, off].set(vn)
 
@@ -677,6 +758,11 @@ class PagedKVCache:
         hd = self.k_pool.shape[4]
         k = self.k_pool[:, :, idx].reshape(L, Hkv, n_tokens, hd)
         v = self.v_pool[:, :, idx].reshape(L, Hkv, n_tokens, hd)
+        if self.kv_dtype == "int8":   # admission-time dequant (off hot path)
+            ks = self.k_scale[:, :, idx].reshape(L, Hkv, n_tokens)
+            vs = self.v_scale[:, :, idx].reshape(L, Hkv, n_tokens)
+            k = kv_quant.dequantize_kv(k, ks, self.cfg.dtype)
+            v = kv_quant.dequantize_kv(v, vs, self.cfg.dtype)
         return k, v
 
     def gather(self, seq_ids: List[int], pad_len: int
@@ -696,6 +782,11 @@ class PagedKVCache:
         idx = jnp.asarray(tables)      # (B, nb)
         k = self.k_pool[:, :, idx]     # (L, Hkv, B, nb, bs, hd)
         v = self.v_pool[:, :, idx]
+        if self.kv_dtype == "int8":    # oracle only — dense dequant is fine
+            k = kv_quant.dequantize_kv(k, self.k_scale[:, :, idx],
+                                       self.cfg.dtype)
+            v = kv_quant.dequantize_kv(v, self.v_scale[:, :, idx],
+                                       self.cfg.dtype)
         L, Hkv = k.shape[0], k.shape[1]
         B = len(seq_ids)
         k = jnp.transpose(k, (0, 2, 3, 4, 1, 5)).reshape(
@@ -738,11 +829,15 @@ class PagedKVCache:
         # one device gather per payload, then host-side tiles (the "wire")
         k = np.asarray(self.k_pool[:, :, idx])
         v = np.asarray(self.v_pool[:, :, idx])
+        ks = vs = None
+        if self.k_scale is not None:   # scales ship with their blocks
+            ks = np.asarray(self.k_scale[:, :, idx])
+            vs = np.asarray(self.v_scale[:, :, idx])
         return KVHandoffPayload(
             tables={sid: tuple(self.tables[sid]) for sid in seq_ids},
             lengths={sid: self.lengths[sid] for sid in seq_ids},
             block_ids=tuple(ids), k_blocks=k, v_blocks=v,
-            block_size=self.block_size)
+            block_size=self.block_size, k_scales=ks, v_scales=vs)
 
     def prealloc_handoff(self, payload: "KVHandoffPayload"
                          ) -> Dict[int, int]:
@@ -826,6 +921,18 @@ class PagedKVCache:
         sub-range IS the simulated wire budget: a decode replica's
         TransferQueue calls this with ``transfer_blocks_per_step`` blocks
         per engine step. Returns the bytes written."""
+        # validate dtype compatibility BEFORE any scatter: a mismatched
+        # payload must fail cleanly, not corrupt the pool and then raise
+        if payload.k_scales is not None and self.k_scale is None:
+            raise ValueError(
+                "write_handoff_blocks: payload carries int8 scales but "
+                "the destination pool is not kv_dtype='int8' — source "
+                "and destination tiers must agree on kv_dtype")
+        if payload.k_scales is None and self.k_scale is not None:
+            raise ValueError(
+                "write_handoff_blocks: destination pool is kv_dtype='int8' "
+                "but the payload carries no scales — source and destination "
+                "tiers must agree on kv_dtype")
         ids = payload.block_ids[start:stop]
         if not ids:
             return 0
@@ -834,6 +941,11 @@ class PagedKVCache:
         v = jnp.asarray(payload.v_blocks[:, :, start:stop])
         self.k_pool = self.k_pool.at[:, :, dst].set(k)
         self.v_pool = self.v_pool.at[:, :, dst].set(v)
+        if payload.k_scales is not None:
+            self.k_scale = self.k_scale.at[:, :, dst].set(
+                jnp.asarray(payload.k_scales[:, :, start:stop]))
+            self.v_scale = self.v_scale.at[:, :, dst].set(
+                jnp.asarray(payload.v_scales[:, :, start:stop]))
         return payload.bytes_of_blocks(stop - start)
 
     def import_seqs(self, payload: "KVHandoffPayload") -> Dict[int, int]:
@@ -857,13 +969,20 @@ class KVHandoffPayload:
     ``v_blocks`` ``(L, Hkv, n_unique, bs, hd)`` are packed. The importer
     never sees source pool geometry beyond the ids — `prealloc_handoff`
     remaps them onto its own shards (source and destination pools may have
-    different ``n_shards``)."""
+    different ``n_shards``).
+
+    int8 pools additionally ship ``k_scales`` / ``v_scales``
+    ``(L, Hkv, n_unique, bs)`` fp32 tiles packed in the same block order —
+    scales follow their blocks across the wire, and the int8 + scale bytes
+    together ≈ halve ``nbytes`` vs a bf16 payload of the same blocks."""
     tables: Dict[int, Tuple[int, ...]]
     lengths: Dict[int, int]
     block_ids: Tuple[int, ...]
     k_blocks: np.ndarray
     v_blocks: np.ndarray
     block_size: int
+    k_scales: Optional[np.ndarray] = None
+    v_scales: Optional[np.ndarray] = None
 
     @property
     def n_blocks(self) -> int:
@@ -871,8 +990,11 @@ class KVHandoffPayload:
 
     @property
     def nbytes(self) -> int:
-        """Total wire bytes (K + V tiles)."""
-        return int(self.k_blocks.nbytes + self.v_blocks.nbytes)
+        """Total wire bytes (K + V tiles, plus scale tiles when int8)."""
+        total = int(self.k_blocks.nbytes + self.v_blocks.nbytes)
+        if self.k_scales is not None:
+            total += int(self.k_scales.nbytes + self.v_scales.nbytes)
+        return total
 
     def bytes_of_blocks(self, n: int) -> int:
         """Wire bytes of `n` payload blocks (K + V)."""

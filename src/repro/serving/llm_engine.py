@@ -198,7 +198,8 @@ class LLMEngine:
         self.config = econf
         self.params = params
         self.kv = PagedKVCache(cfg, econf.num_blocks, econf.block_size,
-                               n_shards=econf.resolved_kv_shards)
+                               n_shards=econf.resolved_kv_shards,
+                               kv_dtype=econf.kv_dtype)
         self.placement: PlacementStrategy = make_placement(cfg, econf)
         # Chunked prefill is a COMPUTE decision like the prefix-sharing
         # skip: a chunk boundary changes MoE capacity-dispatch groups, so
@@ -213,17 +214,27 @@ class LLMEngine:
                                       econf.decode_headroom,
                                       prefix_sharing=econf.prefix_sharing)
         self.stats = EngineStats()
+        self.stats.kv_pool_bytes_resident = self.kv.pool_bytes_resident
         self._decode_jit = jax.jit(self.placement.decode_fn())
         self._prefill_jit = jax.jit(
             lambda p, b: transformer.prefill(p, cfg, b,
                                              max_seq=b["tokens"].shape[1]))
-        def _suffix_prefill(p, b, k_pool, v_pool, idx):
+        def _suffix_prefill(p, b, k_pool, v_pool, idx,
+                            k_scale=None, v_scale=None):
             # fused prefix gather: the shared blocks' KV is sliced out of
             # the pool INSIDE the jitted program (one compiled gather, no
-            # eager dispatch / host round-trip per admission)
+            # eager dispatch / host round-trip per admission). Int8 pools
+            # dequantize the gathered prefix here — admission-time, once
+            # per shared prefix, explicitly off the per-step hot path.
             L, Hkv, _, bs, hd = k_pool.shape
-            kp = k_pool[:, :, idx].reshape(L, Hkv, idx.shape[0] * bs, hd)
-            vp = v_pool[:, :, idx].reshape(L, Hkv, idx.shape[0] * bs, hd)
+            n_tok = idx.shape[0] * bs
+            kp = k_pool[:, :, idx].reshape(L, Hkv, n_tok, hd)
+            vp = v_pool[:, :, idx].reshape(L, Hkv, n_tok, hd)
+            if k_scale is not None:
+                ks = k_scale[:, :, idx].reshape(L, Hkv, n_tok)
+                vs = v_scale[:, :, idx].reshape(L, Hkv, n_tok)
+                kp = (kp.astype(jnp.float32) * ks[..., None]).astype(cfg.dtype)
+                vp = (vp.astype(jnp.float32) * vs[..., None]).astype(cfg.dtype)
             return transformer.prefill_suffix(p, cfg, b, kp[:, None],
                                               vp[:, None])
         self._prefill_suffix_jit = jax.jit(_suffix_prefill)
@@ -239,8 +250,10 @@ class LLMEngine:
         # (one-shot prefill, by contrast, compiles per distinct prompt
         # length); only the final partial chunk adds a per-length shape.
         self._prefill_chunk_jit = jax.jit(
-            lambda p, b, kp, vp, idx: transformer.prefill_chunk(
-                p, cfg, b, kp, vp, idx, backend=econf.decode_backend))
+            lambda p, b, kp, vp, idx, ks=None, vs=None:
+                transformer.prefill_chunk(
+                    p, cfg, b, kp, vp, idx, backend=econf.decode_backend,
+                    k_scale_pool=ks, v_scale_pool=vs))
         # Prefill COMPUTE can only be skipped when suffix-only prefill is
         # bit-identical to the full one. MoE capacity dispatch couples the
         # tokens of a routing group (expert capacity and reduction shapes
@@ -550,6 +563,14 @@ class LLMEngine:
     # ------------------------------------------------------------------
     # prefill / recompute
     # ------------------------------------------------------------------
+    def _scale_kwargs(self, k_name: str, v_name: str) -> Dict:
+        """The int8 pool's scale operands for a jitted call, keyed by the
+        callee's kwarg names; empty for bf16 pools (scales-follow-blocks:
+        every compute path that reads the pool also receives its scales)."""
+        if self.kv.k_scale is None:
+            return {}
+        return {k_name: self.kv.k_scale, v_name: self.kv.v_scale}
+
     def _prefill(self, req: Request) -> None:
         logits = self._prefill_known(req.rid, req.prompt)
         tok = self._sample([req], logits)
@@ -594,7 +615,8 @@ class LLMEngine:
             toks = jnp.asarray([list(known[shared:])], jnp.int32)
             logits, cache = self._prefill_suffix_jit(
                 self.params, {"tokens": toks}, self.kv.k_pool,
-                self.kv.v_pool, idx)
+                self.kv.v_pool, idx, **self._scale_kwargs("k_scale",
+                                                          "v_scale"))
             # suffix cache k/v are head-major (L, 1, Hkv, S-shared, hd)
             self.kv.write_prefill(rid, cache["k"][:, 0], cache["v"][:, 0],
                                   start_token=shared)
@@ -661,7 +683,7 @@ class LLMEngine:
         idx = self.kv.gather_prefix_indices(rid, cursor)
         logits, cache = self._prefill_chunk_jit(
             self.params, {"tokens": toks}, self.kv.k_pool, self.kv.v_pool,
-            idx)
+            idx, **self._scale_kwargs("ks", "vs"))
         # chunk cache k/v are head-major (L, 1, Hkv, C, hd) — the pool's
         # layout; write_prefill_chunk extends the allocation then scatters
         self.kv.write_prefill_chunk(rid, cache["k"][:, 0], cache["v"][:, 0],
@@ -753,6 +775,9 @@ class LLMEngine:
             r.record_token(int(toks[i]))
         self.placement.log_step(len(running))
         self.stats.steps += 1
+        self.stats.kv_pool_bytes_resident = self.kv.pool_bytes_resident
+        self.stats.kv_bytes_read += (self.kv.unique_live_tokens(ids) *
+                                     self.kv.bytes_per_live_token())
         self.stats.tokens_generated += len(running)
         self.stats.batch_sizes.append(len(running))
         self.stats.step_times.append(dt)
@@ -775,7 +800,8 @@ class LLMEngine:
         while True:
             logits, updates = self._decode_jit(
                 self.params, tokens, self.kv.k_pool, self.kv.v_pool,
-                jnp.asarray(tables), jnp.asarray(lens), *extra)
+                jnp.asarray(tables), jnp.asarray(lens), *extra,
+                **self._scale_kwargs("k_scale_pool", "v_scale_pool"))
             logits.block_until_ready()
             shard = None
             if self._fault is not None:

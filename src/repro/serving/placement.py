@@ -47,13 +47,19 @@ def _tree_index(tree, i):
 def sliced_decode_step(cfg: ModelConfig, pool: AttentionWorkerPool,
                        params, tokens, k_pool, v_pool, block_tables, lens,
                        shard_tables=None, shard_positions=None,
-                       expert_pool: Optional[ExpertWorkerPool] = None):
+                       expert_pool: Optional[ExpertWorkerPool] = None,
+                       k_scale_pool=None, v_scale_pool=None):
     """One disaggregated decode iteration — the converter's slices, executed.
 
     Model slice 0 (norm1 + QKV) runs on the model worker, attention on the
     worker pool (which reads the paged block pool in place), model slice 1
     (o-proj + FFN) back on the model worker; when ``expert_pool`` is given
     (paper §7) the routed expert FFNs run on the expert workers instead.
+
+    Int8 pools: k_scale_pool/v_scale_pool are the (L, Hkv, num_blocks,
+    block_size) scale pools; each layer's slice rides to the worker pool
+    alongside its value pools and dequant fuses inside the workers'
+    attention backends (no dense dequantized slab on this hot path).
     """
     cur_len = lens  # stored tokens
     x = jnp.take(params["embed"], tokens[:, None], axis=0)
@@ -77,7 +83,9 @@ def sliced_decode_step(cfg: ModelConfig, pool: AttentionWorkerPool,
             k[:, 0], v[:, 0], sliding_window=int(window),
             attention_sinks=cfg.attention_sinks if window else 0,
             logit_softcap=cfg.attn_logit_softcap,
-            shard_tables=shard_tables, shard_positions=shard_positions)
+            shard_tables=shard_tables, shard_positions=shard_positions,
+            k_scale=None if k_scale_pool is None else k_scale_pool[layer],
+            v_scale=None if v_scale_pool is None else v_scale_pool[layer])
         # ---- model slice 1: o-proj + residual + FFN ----
         attn_out = out_project(p["attn"], attn[:, None])
         if cfg.post_norms:
@@ -151,10 +159,12 @@ class HomogeneousPlacement(PlacementStrategy):
     def decode_fn(self):
         cfg, backend = self.cfg, self.econf.decode_backend
 
-        def step(params, tokens, k_pool, v_pool, block_tables, lens):
+        def step(params, tokens, k_pool, v_pool, block_tables, lens,
+                 k_scale_pool=None, v_scale_pool=None):
             return transformer.decode_step_paged(
                 params, cfg, tokens, k_pool, v_pool, block_tables, lens,
-                backend=backend)
+                backend=backend, k_scale_pool=k_scale_pool,
+                v_scale_pool=v_scale_pool)
         return step
 
 
@@ -168,7 +178,7 @@ class AttentionPoolPlacement(PlacementStrategy):
         super().__init__(cfg, econf)
         self._pool = AttentionWorkerPool(
             cfg, econf.attention_workers, econf.partition,
-            econf.decode_backend)
+            econf.decode_backend, kv_dtype=econf.kv_dtype)
 
     @property
     def pool(self) -> AttentionWorkerPool:
@@ -178,11 +188,13 @@ class AttentionPoolPlacement(PlacementStrategy):
         cfg, pool = self.cfg, self._pool
 
         def step(params, tokens, k_pool, v_pool, block_tables, lens,
-                 shard_tables=None, shard_positions=None):
+                 shard_tables=None, shard_positions=None,
+                 k_scale_pool=None, v_scale_pool=None):
             return sliced_decode_step(
                 cfg, pool, params, tokens, k_pool, v_pool, block_tables,
                 lens, shard_tables, shard_positions,
-                expert_pool=self.expert_pool)
+                expert_pool=self.expert_pool,
+                k_scale_pool=k_scale_pool, v_scale_pool=v_scale_pool)
         return step
 
     def decode_extra_args(self, kv: PagedKVCache,
@@ -217,11 +229,14 @@ class AttentionPoolPlacement(PlacementStrategy):
 
     def log_prefill_chunk(self, tokens: int) -> None:
         """One chunk's KV crosses the wire model->pool once per layer (the
-        prefill-axis counterpart of the per-step k_new/v_new transfer)."""
+        prefill-axis counterpart of the per-step k_new/v_new transfer).
+        Int8 pools ship quantized values + fp32 scales (hd + 4 bytes per
+        token-head instead of hd·2) — the wire follows the pool dtype."""
         cfg = self.cfg
         hd = cfg.resolved_head_dim
-        self._pool.log.kv_bytes += (2 * tokens * cfg.num_kv_heads * hd *
-                                    BYTES * cfg.num_layers)
+        per_head = hd + 4 if self.econf.kv_dtype == "int8" else hd * BYTES
+        self._pool.log.kv_bytes += (2 * tokens * cfg.num_kv_heads *
+                                    per_head * cfg.num_layers)
         self._pool.log.transfers += cfg.num_layers
 
 

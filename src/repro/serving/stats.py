@@ -67,6 +67,13 @@ class EngineStats:
     handoff_latencies: List[float] = dataclasses.field(default_factory=list)
     handoff_retries: int = 0
     router_affinity_hits: int = 0
+    # quantized KV pool (EngineConfig.kv_dtype): resident bytes of the
+    # whole pool allocation (value pools + int8 scale sidecars) and the
+    # cumulative bytes the decode hot path streamed over live tokens —
+    # int8 lands both at ≈ 0.5× their bf16 values for hd ≫ 4 (hd + 4
+    # bytes per token-head vs 2·hd), the reduction bench_serving asserts
+    kv_pool_bytes_resident: int = 0
+    kv_bytes_read: int = 0
 
     @property
     def mean_batch(self) -> float:
@@ -85,6 +92,12 @@ class EngineStats:
     def handoffs_completed(self) -> int:
         """Handoff payloads fully landed on this replica's pool."""
         return len(self.handoff_latencies)
+
+    @property
+    def kv_bytes_read_per_step(self) -> float:
+        """Mean KV bytes one decode iteration streams from the pool
+        (live-token bytes over unique physical blocks, scales included)."""
+        return self.kv_bytes_read / self.steps if self.steps else 0.0
 
     # ---------------- per-request latency surface ----------------
     def observe_request(self, req) -> None:
@@ -142,6 +155,8 @@ class EngineStats:
             "straggle_steps": self.straggle_steps,
             "requests_recovered": self.requests_recovered,
             "kv_bytes_transferred": self.kv_bytes_transferred,
+            "kv_pool_bytes_resident": self.kv_pool_bytes_resident,
+            "kv_bytes_read_per_step": self.kv_bytes_read_per_step,
             "handoffs_completed": self.handoffs_completed,
             "handoff_retries": self.handoff_retries,
             "router_affinity_hits": self.router_affinity_hits,

@@ -54,11 +54,13 @@ class AttentionWorkerPool:
     engine's), but owns partitioning + accounting of attention work."""
 
     def __init__(self, cfg: ModelConfig, n_workers: int = 2,
-                 partition: str = "head", backend: str = "jnp"):
+                 partition: str = "head", backend: str = "jnp",
+                 kv_dtype: str = "bf16"):
         self.cfg = cfg
         self.n = n_workers
         self.partition = partition
         self.backend = backend
+        self.kv_dtype = kv_dtype
         self.log = TransferLog()
         self.per_worker_kv_bytes = [0] * n_workers
         if partition not in ("head", "request", "block"):
@@ -137,7 +139,8 @@ class AttentionWorkerPool:
                      k_new, v_new, *, sliding_window: int = 0,
                      attention_sinks: int = 0,
                      logit_softcap: float = 0.0,
-                     shard_tables=None, shard_positions=None) -> jax.Array:
+                     shard_tables=None, shard_positions=None,
+                     k_scale=None, v_scale=None) -> jax.Array:
         """Paged variant of :meth:`attend` — the engine's decode hot path.
 
         q: (B, H, hd); k_pool/v_pool: one layer's HEAD-MAJOR pool slice
@@ -154,6 +157,13 @@ class AttentionWorkerPool:
         cache at hand) an owner-masked view of the global table is derived
         in-trace instead: equally exact, but every worker then walks all nb
         slots, reading ~n× the live KV.
+
+        Int8 pools (``kv_dtype="int8"``): k_scale/v_scale are the per-layer
+        scale pools (Hkv, num_blocks, block_size) and each worker's slice
+        of them follows its pool slice exactly — head partition slices the
+        head axis, block partition the block axis, request partition
+        replicates (scales-follow-blocks invariant). Dequant stays fused
+        inside each worker's backend; the partial-merge math is unchanged.
 
         No per-worker byte accounting happens here — this method runs
         inside the engine's jitted step, where python side effects fire at
@@ -176,9 +186,12 @@ class AttentionWorkerPool:
             for wid in range(self.n):
                 sl = slice(wid * hk, (wid + 1) * hk)
                 qs = q.reshape(B, Hkv, g, hd)[:, sl].reshape(B, hk * g, hd)
+                skw = {} if k_scale is None else dict(
+                    k_scale=k_scale[sl], v_scale=v_scale[sl])
                 o = paged_decode_attention_combine(
                     qs, k_pool[sl], v_pool[sl], block_tables, cache_len,
-                    k_new[:, sl], v_new[:, sl], backend=self.backend, **kw)
+                    k_new[:, sl], v_new[:, sl], backend=self.backend,
+                    **kw, **skw)
                 outs.append(o.reshape(B, hk, g, hd))
             out = jnp.concatenate(outs, axis=1).reshape(B, H, hd)
         elif self.partition == "block":
@@ -208,10 +221,13 @@ class AttentionWorkerPool:
                               for wid in range(self.n)]
             partials = []
             for wid, (bt_w, pos_w) in enumerate(per_worker):
+                bsl = slice(wid * npb, (wid + 1) * npb)
+                skw = {} if k_scale is None else dict(
+                    k_scale=k_scale[:, bsl], v_scale=v_scale[:, bsl])
                 partials.append(paged_decode_attention_partial_pos(
-                    q, k_pool[:, wid * npb:(wid + 1) * npb],
-                    v_pool[:, wid * npb:(wid + 1) * npb],
-                    bt_w, pos_w, cache_len, backend=self.backend, **kw))
+                    q, k_pool[:, bsl], v_pool[:, bsl],
+                    bt_w, pos_w, cache_len, backend=self.backend,
+                    **kw, **skw))
             p_new = _new_token_partial(q, k_new, v_new,
                                        logit_softcap=logit_softcap)
             out = C.finalize(C.combine(C.combine_many(partials),
@@ -222,10 +238,12 @@ class AttentionWorkerPool:
             for wid, idx in enumerate(splits):
                 if len(idx) == 0:
                     continue
+                skw = {} if k_scale is None else dict(
+                    k_scale=k_scale, v_scale=v_scale)
                 o = paged_decode_attention_combine(
                     q[idx], k_pool, v_pool, block_tables[idx],
                     cache_len[idx], k_new[idx], v_new[idx],
-                    backend=self.backend, **kw)
+                    backend=self.backend, **kw, **skw)
                 outs.append(o)
             out = jnp.concatenate(outs, axis=0)
         else:
@@ -240,10 +258,14 @@ class AttentionWorkerPool:
         reads this iteration (data-dependent, so logged host-side — see
         LLMEngine._decode_iteration, which derives them per partition);
         kv_head_fraction scales for head partitioning (each worker reads
-        only Hkv/n heads of every token)."""
+        only Hkv/n heads of every token). Per-token-head bytes follow the
+        pool's kv_dtype: bf16 reads hd·2 bytes, int8 reads hd·1 plus the
+        fp32 scale (hd + 4) — the ~2× stream reduction the quantized pool
+        buys on the decode hot path."""
         hd = self.cfg.resolved_head_dim
-        per_tok = 2 * self.cfg.num_kv_heads * kv_head_fraction * hd * \
-            BYTES * n_layers
+        per_head = hd + 4 if self.kv_dtype == "int8" else hd * BYTES
+        per_tok = 2 * self.cfg.num_kv_heads * kv_head_fraction * \
+            per_head * n_layers
         for wid in range(self.n):
             self.per_worker_kv_bytes[wid] += int(worker_tokens[wid] * per_tok)
 
